@@ -1,0 +1,63 @@
+"""Paper Fig. 10: bandwidth efficiency b_eff = T_actual / B_DRAM (Eq. 1).
+
+b_eff is computed from the analytic DRAM-traffic models (identical
+accounting for every algorithm; hardware-independent, so it extrapolates
+to the paper's 512MB-32GB datasets without needing 32GB of host RAM):
+
+    useful  = n * key_bytes (in) + n * key_bytes (out)
+    b_eff   = useful / total_traffic(algorithm)
+
+The paper's claim under test: the compressed histogram keeps intermediate
+traffic near zero (trie resident on-chip, bin ids reconstructed from
+position), so fractal b_eff >> multi-pass radix / comparison sorts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (
+    bitonic_sort_stats,
+    comparison_sort_stats,
+    fractal_sort_stats,
+    radix_sort_stats,
+)
+
+
+def b_eff(stats) -> float:
+    kb = 4 if stats.p > 16 else 2
+    useful = 2 * stats.n * kb
+    return useful / stats.bytes_total
+
+
+def run():
+    # dataset sizes from the paper's Fig. 10 (bytes of 16-bit keys)
+    for gb in (0.5, 4, 16, 32):
+        n = int(gb * 2**30 // 2)
+        p = 16
+        fr = b_eff(fractal_sort_stats(n, p))
+        fri = b_eff(fractal_sort_stats(n, p, with_index=True))
+        rxi = b_eff(radix_sort_stats(n, p, with_index=True))
+        cm = b_eff(comparison_sort_stats(n, p))
+        bt = b_eff(bitonic_sort_stats(n, p))
+        row(f"bandwidth/fractal_keys/{gb}GB", 0.0, f"b_eff={fr:.3f}")
+        row(f"bandwidth/fractal_stable/{gb}GB", 0.0,
+            f"b_eff={fri:.3f} (paper Fig10 reports 0.41)")
+        row(f"bandwidth/radix_stable/{gb}GB", 0.0,
+            f"b_eff={rxi:.3f} fractal_gain={fri / rxi:.2f}x")
+        row(f"bandwidth/comparison/{gb}GB", 0.0,
+            f"b_eff={cm:.3f} fractal_gain={fri / cm:.2f}x")
+        row(f"bandwidth/bitonic/{gb}GB", 0.0,
+            f"b_eff={bt:.3f} fractal_gain={fri / bt:.2f}x")
+    # p=32 (the paper's Table II precision): two compressed passes
+    n = int(4 * 2**30 // 4)
+    fr32 = b_eff(fractal_sort_stats(n, 32))
+    rx32 = b_eff(radix_sort_stats(n, 32))
+    row("bandwidth/fractal/4GB/p32", 0.0, f"b_eff={fr32:.3f}")
+    row("bandwidth/radix/4GB/p32", 0.0,
+        f"b_eff={rx32:.3f} fractal_gain={fr32 / rx32:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

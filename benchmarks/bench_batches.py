@@ -1,0 +1,25 @@
+"""Paper Fig. 7: latency vs serial batch count (streaming with the cached
+histogram)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import fractal_sort_batched
+
+
+def run(n: int = 1 << 14, p: int = 16):
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 1 << p, n), jnp.int32)
+    for b in (1, 2, 4, 8):
+        t = time_fn(lambda k: fractal_sort_batched(k, p, b)[0], keys,
+                    warmup=1, repeat=3)
+        row(f"batches/serial/b={b}/n{n}", t, f"keys_per_s={n / t:.3g}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Fig. 3/5 + Table II: sort latency, FractalSort vs baselines.
+
+CPU-scaled n (the paper runs to 2^31 on a 32-vCPU host; this container has
+one core — trends and crossovers are the reproduction target, recorded in
+EXPERIMENTS.md §Paper-validation)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import fractal_sort, lsd_radix_sort, xla_sort
+from repro.kernels import ops
+
+
+def run(sizes=(1 << 10, 1 << 12, 1 << 14, 1 << 16), p: int = 16):
+    rng = np.random.default_rng(0)
+    results = {}
+    for n in sizes:
+        keys = jnp.asarray(rng.integers(0, 1 << p, n), jnp.int32)
+        t_f = time_fn(functools.partial(fractal_sort, p=p), keys)
+        t_r = time_fn(functools.partial(lsd_radix_sort, p=p), keys)
+        t_x = time_fn(xla_sort, keys)
+        row(f"latency/fractal/n{n}/p{p}", t_f, f"keys_per_s={n / t_f:.3g}")
+        row(f"latency/radix/n{n}/p{p}", t_r, f"keys_per_s={n / t_r:.3g}")
+        row(f"latency/xla_sort/n{n}/p{p}", t_x, f"keys_per_s={n / t_x:.3g}")
+        results[n] = (t_f, t_r, t_x)
+    # sub-linear growth check (paper: fractal grows slower than comparison)
+    lo, hi = min(sizes), max(sizes)
+    growth_f = results[hi][0] / results[lo][0]
+    growth_x = results[hi][2] / results[lo][2]
+    row("latency/growth_ratio_fractal_vs_xla", 0.0,
+        f"fractal={growth_f:.1f}x xla={growth_x:.1f}x over {hi // lo}x data")
+    return results
+
+
+if __name__ == "__main__":
+    run()

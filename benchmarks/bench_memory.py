@@ -1,0 +1,54 @@
+"""Paper Fig. 6/8: memory footprint vs n, and vs serial batch count.
+
+Histogram bytes are exact (tapered vs wide); end-to-end footprints use the
+analytic traffic/storage models (hardware-independent, the same accounting
+for every algorithm)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import (
+    build_histogram,
+    fractal_sort_stats,
+    histogram_nbytes,
+    radix_sort_stats,
+    trie_depth,
+)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # Fig 6: histogram + working-set growth with n (p=16)
+    for logn in (10, 14, 18, 22, 26, 30):
+        n, p = 1 << logn, 16
+        l_n = trie_depth(n, p)
+        fs = fractal_sort_stats(n, p)
+        rs = radix_sort_stats(n, p)
+        # fractal working set: keys + entries + tapered trie
+        fractal_total = n * 2 + n * 2 + fs.histogram_bytes
+        radix_total = n * 2 * 2 + rs.histogram_bytes  # double buffer
+        row(f"memory/fractal/n=2^{logn}", 0.0,
+            f"bytes={fractal_total} trie={fs.histogram_bytes}")
+        row(f"memory/radix/n=2^{logn}", 0.0, f"bytes={radix_total}")
+    # measured tapered-vs-wide trie compression at a real n
+    keys = jnp.asarray(rng.integers(0, 1 << 16, 1 << 14), jnp.int32)
+    h = build_histogram(keys, 16, trie_depth(1 << 14, 16))
+    tap = histogram_nbytes(h, True, 1 << 14)
+    wide = histogram_nbytes(h, False, 1 << 14)
+    row("memory/trie_tapered", 0.0, f"bytes={tap}")
+    row("memory/trie_wide", 0.0, f"bytes={wide} ratio={wide / tap:.2f}x")
+    # Fig 8: memory vs serial batch count (cached-histogram streaming):
+    # per-batch buffers shrink as 1/b while the shared trie is constant.
+    n = 1 << 22
+    fs = fractal_sort_stats(n, 16)
+    for b in (1, 2, 5, 10, 20):
+        per_batch = n // b * 2 * 2  # in+out slice buffers
+        total = per_batch + fs.histogram_bytes + n * 2  # + output array
+        row(f"memory/serial_batches/b={b}", 0.0, f"bytes={total}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 9: unit throughput T_unit = n / (t * n_cores)."""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import fractal_sort, lsd_radix_sort, xla_sort
+
+
+def run(p: int = 16):
+    n_cores = os.cpu_count() or 1
+    rng = np.random.default_rng(0)
+    for logn in (12, 14, 16, 18):
+        n = 1 << logn
+        keys = jnp.asarray(rng.integers(0, 1 << p, n), jnp.int32)
+        for name, fn in (
+            ("fractal", functools.partial(fractal_sort, p=p)),
+            ("radix", functools.partial(lsd_radix_sort, p=p)),
+            ("xla_sort", xla_sort),
+        ):
+            t = time_fn(fn, keys, warmup=1, repeat=3)
+            row(f"throughput/{name}/n=2^{logn}", t,
+                f"unit_keys_per_s_per_core={n / (t * n_cores):.4g}")
+
+
+if __name__ == "__main__":
+    run()

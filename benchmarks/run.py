@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row).
+
+  bench_latency     Fig. 3/5 + Table II   sort latency vs baselines
+  bench_memory      Fig. 6/8              footprint vs n / batch count
+  bench_batches     Fig. 7                latency vs serial batch count
+  bench_throughput  Fig. 9                unit throughput
+  bench_bandwidth   Fig. 10               b_eff = T_actual / B_DRAM
+  bench_moe_dispatch  (beyond paper)      dispatch vs argsort
+  roofline          assignment §Roofline  from dry-run artifacts
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_batches, bench_bandwidth, bench_latency,
+                            bench_memory, bench_moe_dispatch,
+                            bench_throughput, roofline)
+
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    mods = {
+        "latency": bench_latency, "memory": bench_memory,
+        "batches": bench_batches, "throughput": bench_throughput,
+        "bandwidth": bench_bandwidth, "moe_dispatch": bench_moe_dispatch,
+        "roofline": roofline,
+    }
+    print("name,us_per_call,derived")
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        mod.run()
+
+
+if __name__ == '__main__':
+    main()

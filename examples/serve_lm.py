@@ -1,0 +1,13 @@
+"""Serving example: batched decode with the fractal-sort request scheduler.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = ["serve", "--arch", "llama3.2-1b", "--smoke",
+                "--num-requests", "10", "--batch-slots", "4"]
+    main()

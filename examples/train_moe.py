@@ -1,0 +1,24 @@
+"""End-to-end driver: train a reduced qwen3-MoE for a few hundred steps on
+CPU with the fractal dispatch on the hot path, checkpointing and journal on.
+
+    PYTHONPATH=src python examples/train_moe.py [--steps 300]
+"""
+
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] if len(sys.argv) > 1 else [])
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args, _ = ap.parse_known_args()
+    sys.argv = [
+        "train", "--arch", "qwen3-moe-30b-a3b", "--smoke",
+        "--steps", str(args.steps), "--global-batch", "8",
+        "--seq-len", "64", "--ckpt-dir", "/tmp/repro_moe_ckpt",
+        "--ckpt-every", "50",
+    ]
+    main()

@@ -1,0 +1,11 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from repro.configs.base import (
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    get_config,
+    list_configs,
+    register,
+    smoke_config,
+)

@@ -1,0 +1,36 @@
+"""The paper's own experiment configurations (§IV) as selectable workload
+configs — used by the benchmark harness; kept alongside the LM architecture
+configs so `--arch`-style selection covers the paper's native workloads too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SortWorkload:
+    name: str
+    p: int              # key precision (bits)
+    log2n_range: tuple  # dataset sizes, paper Fig. 3/5/6/9
+    batches: tuple      # serial batch counts, paper Fig. 7/8
+    distribution: str = "uniform"  # paper §IV.A test bed
+
+
+# Table II / Figs 3,6,7,8: p=32 latency+memory study up to n=2^30
+PAPER_P32 = SortWorkload(
+    name="paper-p32",
+    p=32,
+    log2n_range=(10, 30),
+    batches=(1, 2, 5, 10, 20),
+)
+
+# Figs 9,10: p=16 throughput + bandwidth-efficiency study (512MB..32GB)
+PAPER_P16 = SortWorkload(
+    name="paper-p16",
+    p=16,
+    log2n_range=(10, 31),
+    batches=(1, 14),
+)
+
+WORKLOADS = {w.name: w for w in (PAPER_P32, PAPER_P16)}

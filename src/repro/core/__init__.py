@@ -1,0 +1,34 @@
+"""FractalSortCPU's contribution, adapted to TPU-native JAX (see DESIGN.md §2)."""
+
+from repro.core.fractal_tree import (
+    FractalHistogram,
+    bit_reverse,
+    build_histogram,
+    ceil_log2,
+    get_index,
+    get_item,
+    histogram_nbytes,
+    merge_histograms,
+    taper_levels,
+    tapered_bits,
+    tapered_dtype,
+    trie_depth,
+)
+from repro.core.fractal_sort import (
+    SortStats,
+    fractal_argsort,
+    fractal_rank,
+    fractal_sort,
+    fractal_sort_batched,
+    fractal_sort_stats,
+    reconstruct,
+)
+from repro.core.baselines import (
+    bitonic_sort,
+    bitonic_sort_stats,
+    comparison_sort_stats,
+    lsd_radix_sort,
+    radix_sort_stats,
+    xla_sort,
+)
+from repro.core.distributed import distributed_fractal_sort, make_distributed_sort

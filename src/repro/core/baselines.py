@@ -1,0 +1,109 @@
+"""The paper's comparison set, implemented in JAX (§IV: quick/merge/heap/Tim
+sort baselines collapse to XLA's comparison sort here; the radix baseline is
+a classic multi-pass LSD with full-key scatters — the thing FractalSort's
+compressed entries beat on bandwidth).
+
+Each baseline also exposes an analytic traffic model mirroring
+:func:`repro.core.fractal_sort.fractal_sort_stats` so the bandwidth-
+efficiency benchmark (paper Fig. 10) compares like for like.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fractal_sort import SortStats, fractal_rank
+
+__all__ = [
+    "xla_sort",
+    "lsd_radix_sort",
+    "bitonic_sort",
+    "radix_sort_stats",
+    "comparison_sort_stats",
+    "bitonic_sort_stats",
+]
+
+
+def xla_sort(keys: jnp.ndarray) -> jnp.ndarray:
+    """Comparison sort (stands in for quick/merge/heap/Tim sort columns)."""
+    return jnp.sort(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "radix_bits", "batch"))
+def lsd_radix_sort(keys: jnp.ndarray, p: int, radix_bits: int = 8,
+                   batch: int = 1024) -> jnp.ndarray:
+    """Classic LSD radix sort: ceil(p / radix_bits) stable counting passes,
+    each moving the FULL key through memory (the bandwidth cost FractalSort
+    removes via bin-position reconstruction)."""
+    u = keys.astype(jnp.uint32)
+    n_passes = math.ceil(p / radix_bits)
+    mask = (1 << radix_bits) - 1
+    for i in range(n_passes):
+        digit = ((u >> (i * radix_bits)) & mask).astype(jnp.int32)
+        rank, _, _ = fractal_rank(digit, 1 << radix_bits, batch=batch)
+        u = jnp.zeros_like(u).at[rank].set(u)
+    return u.astype(keys.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ascending",))
+def bitonic_sort(keys: jnp.ndarray, ascending: bool = True) -> jnp.ndarray:
+    """Bitonic sorting network (the paper's GPU/Terasort comparison column,
+    Table I: O(log^2 n) depth).  Requires power-of-two length."""
+    n = keys.shape[0]
+    assert n & (n - 1) == 0, "bitonic_sort requires power-of-two n"
+    x = keys
+    log_n = n.bit_length() - 1
+    for stage in range(1, log_n + 1):
+        for sub in range(stage - 1, -1, -1):
+            stride = 1 << sub
+            idx = jnp.arange(n)
+            partner = idx ^ stride
+            up = ((idx >> stage) & 1) == 0 if stage < log_n else jnp.full((n,), ascending)
+            px = x[partner]
+            keep_min = (idx < partner) == up
+            lo = jnp.minimum(x, px)
+            hi = jnp.maximum(x, px)
+            x = jnp.where(keep_min, lo, hi)
+    return x
+
+
+def radix_sort_stats(n: int, p: int, radix_bits: int = 8,
+                     with_index: bool = False) -> SortStats:
+    """LSD radix traffic: every pass reads AND writes the full key array
+    (+ a 4-byte arrival index per key when tracking stable payloads)."""
+    passes = math.ceil(p / radix_bits)
+    kb = 4 if p > 16 else 2
+    per = kb + (4 if with_index else 0)
+    return SortStats(
+        n=n, p=p, l_n=radix_bits, passes=passes,
+        bytes_read=passes * n * per,
+        bytes_written=passes * n * per,
+        histogram_bytes=(1 << radix_bits) * 4,
+    )
+
+
+def comparison_sort_stats(n: int, p: int) -> SortStats:
+    """Merge-sort-like traffic: log2(n) passes, full keys both ways."""
+    passes = max(1, math.ceil(math.log2(max(n, 2))))
+    kb = 4 if p > 16 else 2
+    return SortStats(
+        n=n, p=p, l_n=0, passes=passes,
+        bytes_read=passes * n * kb, bytes_written=passes * n * kb,
+        histogram_bytes=0,
+    )
+
+
+def bitonic_sort_stats(n: int, p: int) -> SortStats:
+    """Bitonic network: log2(n)*(log2(n)+1)/2 compare-exchange sweeps."""
+    log_n = max(1, math.ceil(math.log2(max(n, 2))))
+    passes = log_n * (log_n + 1) // 2
+    kb = 4 if p > 16 else 2
+    return SortStats(
+        n=n, p=p, l_n=0, passes=passes,
+        bytes_read=passes * n * kb, bytes_written=passes * n * kb,
+        histogram_bytes=0,
+    )

@@ -1,0 +1,158 @@
+"""Pod-scale FractalSort via shard_map — the paper's local→global histogram
+merge (§III.A/B) mapped onto JAX collectives.
+
+The paper's two-phase update — per-thread local compressed tree, then an
+O(log n) merge into the global LLC-resident tree — becomes, on a mesh axis
+of D devices:
+
+1. every device builds the local histogram of its key shard (one bincount;
+   no atomics — the reduction is associative);
+2. one ``psum`` over the axis merges the histograms (the reduction tree of
+   the ICI ring *is* the paper's merge tree; a tapered uint16 wire dtype cuts
+   the AllReduce payload — counter-width compression applied to the
+   collective);
+3. global bin starts come from one exclusive scan of the merged counts; each
+   device's *arrival offset* inside every bin comes from an exclusive scan
+   over devices (``all_gather`` of local counts + masked sum — devices are
+   ordered, so the sort is stable across the pod);
+4. every key knows its exact global output slot with **no sampling, no
+   splitter exchange, no repartition round-trip** — the paper's
+   distribution-independence claim at cluster scale.  Keys move exactly once
+   per pass, via ``all_to_all`` into equal output shards.
+
+A pass ranks on a full ``<=16``-bit field so placement is *exact* (same-key
+ties break by (device, arrival) — stable).  ``p <= 16`` needs one pass;
+``p <= 32`` runs two stable LSD passes (low half, then high half), matching
+the single-host "compressed entries" scheme.
+
+The all_to_all uses fixed-capacity destination buckets; under heavy
+duplicate skew one device's equal keys occupy *consecutive* global slots and
+can all target one destination, so worst-case capacity is the full local
+shard (``capacity_factor = axis size``).  An overflow flag is returned so
+callers can rerun with a higher factor — same contract as the tapered
+counters' saturation flag (paper §IV.A skew caveat).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.fractal_sort import fractal_rank
+
+__all__ = ["distributed_fractal_sort", "make_distributed_sort"]
+
+
+def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
+                      capacity: int, batch: int, taper_wire: bool):
+    """One stable distributed counting pass on key bits [shift, shift+bits).
+
+    ``u`` is this device's uint32 key shard; returns the re-shuffled shard
+    (keys placed at their exact global rank for this field) + overflow flag.
+    """
+    n_local = u.shape[0]
+    D = jax.lax.psum(1, axis)
+    me = jax.lax.axis_index(axis)
+    n_bins = 1 << bits
+    field = ((u >> shift) & (n_bins - 1)).astype(jnp.int32)
+
+    # (1) local histogram.
+    local_counts = jnp.zeros((n_bins,), jnp.int32).at[field].add(1)
+
+    # (2) global merge — tapered wire dtype (uint16 holds any local shard of
+    # <= 64Ki keys per bin; psum accumulates in int32 after the cast).
+    wire = local_counts.astype(jnp.uint16) if taper_wire and n_local < (1 << 16) else local_counts
+    global_counts = jax.lax.psum(wire.astype(jnp.int32), axis)
+
+    # (3) exclusive scan over devices: my arrival offset within each bin.
+    all_counts = jax.lax.all_gather(wire, axis).astype(jnp.int32)  # (D, bins)
+    before_me = jnp.where(jnp.arange(D)[:, None] < me, all_counts, 0).sum(axis=0)
+    global_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(global_counts)[:-1]])
+
+    # local stable intra-bin arrival ranks.
+    rank_local, _, _ = fractal_rank(field, n_bins, batch=batch)
+    local_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(local_counts)[:-1]])
+    intra = rank_local - local_start[field]
+    global_rank = global_start[field] + before_me[field] + intra
+
+    # (4) route each key to the device owning its output slot.
+    shard_size = n_local  # equal shards by construction
+    dest = jnp.clip(global_rank // shard_size, 0, D - 1)
+    slot_in_dest = global_rank - dest * shard_size
+
+    dest_rank, dest_counts, _ = fractal_rank(dest, D, batch=batch)
+    dest_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(dest_counts)[:-1]])
+    pos_in_bucket = dest_rank - dest_start[dest]
+    overflow = jax.lax.psum(
+        jnp.any(dest_counts > capacity).astype(jnp.int32), axis) > 0
+
+    # fixed-capacity buckets; overflowing entries drop (flagged above).
+    send_keys = jnp.zeros((D, capacity), jnp.uint32).at[
+        dest, pos_in_bucket].set(u, mode="drop")
+    send_slot = jnp.full((D, capacity), -1, jnp.int32).at[
+        dest, pos_in_bucket].set(slot_in_dest, mode="drop")
+
+    recv_keys = jax.lax.all_to_all(send_keys, axis, split_axis=0, concat_axis=0)
+    recv_slot = jax.lax.all_to_all(send_slot, axis, split_axis=0, concat_axis=0)
+    recv_keys = recv_keys.reshape(-1)
+    recv_slot = recv_slot.reshape(-1)
+
+    valid = recv_slot >= 0
+    out = jnp.zeros((n_local,), jnp.uint32).at[
+        jnp.where(valid, recv_slot, n_local)].set(
+        jnp.where(valid, recv_keys, 0), mode="drop")
+    return out, overflow
+
+
+def _sort_body(keys, p: int, axis: str, capacity: int, batch: int,
+               taper_wire: bool):
+    u = keys.astype(jnp.uint32)
+    out, overflow = _distributed_pass(u, 0, min(p, 16), axis, capacity,
+                                      batch, taper_wire)
+    if p > 16:
+        out, ov2 = _distributed_pass(out, 16, p - 16, axis, capacity,
+                                     batch, taper_wire)
+        overflow = overflow | ov2
+    return out.astype(keys.dtype), overflow
+
+
+def make_distributed_sort(mesh, axis: str, p: int,
+                          capacity_factor: Optional[float] = None,
+                          batch: int = 1024,
+                          taper_wire: bool = True):
+    """Build a jit-able distributed sort over ``mesh[axis]``.
+
+    Returns ``fn(keys_global) -> (sorted_global, overflow)``; keys sharded
+    ``P(axis)`` on axis 0, values in ``[0, 2**p)``, ``p <= 32``, global
+    length divisible by the axis size.  ``capacity_factor`` defaults to the
+    axis size (worst-case-safe); pass e.g. 2.0 to shrink the all_to_all
+    buffers for known-low-duplication keys.
+    """
+    D = mesh.shape[axis]
+    cf = capacity_factor if capacity_factor is not None else float(D)
+
+    def fn(keys):
+        n = keys.shape[0]
+        cap = min(int(cf * (n // D) / D) + 1, n // D)
+        body = functools.partial(
+            _sort_body, p=p, axis=axis, capacity=cap, batch=batch,
+            taper_wire=taper_wire)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=P(axis),
+            out_specs=(P(axis), P()),
+        )(keys)
+
+    return fn
+
+
+def distributed_fractal_sort(keys, mesh, axis: str, p: int, **kw):
+    """One-shot convenience wrapper around :func:`make_distributed_sort`."""
+    return make_distributed_sort(mesh, axis, p, **kw)(keys)

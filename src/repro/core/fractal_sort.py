@@ -1,0 +1,299 @@
+"""FractalSort: histogram → rank → reconstruct (paper Algorithms 1–5).
+
+Pipeline for ``n`` keys of ``p`` bits with trie depth ``l_n``:
+
+1. **Histogram** — bincount of the ``l_n``-bit MSB prefixes (the trie leaf
+   level; upper levels by pairwise reduction).  No input bucketing, no
+   sampling: every key contributes independently (paper contributions 1/2).
+2. **Rank** — stable output position per key:
+   ``rank = bin_start[prefix] + carry[prefix] + intra_batch_arrival``.
+   Computed by *batch streaming* (paper §III.C/D): a scan over fixed-size
+   batches carrying the running per-bin histogram, with the intra-batch
+   arrival index from a one-hot cumulative sum — on TPU this is an MXU
+   matmul; here it is the faithful jnp expression of the same dataflow.
+3. **Reconstruct** (Algorithm 5 / FractalSortCPUA) — the sorted array is
+   rebuilt from (bin counts, per-bin stable order, trailing bits).  The top
+   ``l_n`` bits of every output key are *recovered from the bin position*,
+   never moved through memory; only ``p - l_n`` trailing bits travel.  When
+   ``n >= 2**p`` (e.g. the paper's n=2^29, p=16 headline) entries carry zero
+   payload and the output is ``repeat(bin_value, counts)`` — the extreme
+   bandwidth win.
+
+``p = 32`` runs as two stable 16-bit passes (low half then high half, LSD
+order), matching the paper's "reduced number of radix passes on compressed
+entries" (complexity O(n * ceil(p / n_L)), §III.G).
+
+:func:`fractal_sort_stats` returns an *analytic* DRAM-traffic model so
+benchmarks can report the paper's bandwidth efficiency
+``b_eff = T_actual / B_DRAM`` (Eq. 1) exactly, independent of host hardware.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractal_tree as ft
+
+__all__ = [
+    "SortStats",
+    "fractal_rank",
+    "fractal_sort",
+    "fractal_argsort",
+    "fractal_sort_batched",
+    "fractal_sort_stats",
+    "reconstruct",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SortStats:
+    """Analytic DRAM-traffic model for one sort call (bytes)."""
+
+    n: int
+    p: int
+    l_n: int
+    passes: int
+    bytes_read: int
+    bytes_written: int
+    histogram_bytes: int  # tapered trie footprint (on-chip resident)
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_read + self.bytes_written
+
+    @property
+    def bytes_per_key(self) -> float:
+        return self.bytes_total / max(self.n, 1)
+
+
+def _key_bytes(p: int) -> int:
+    return 4 if p > 16 else 2
+
+
+def fractal_sort_stats(n: int, p: int, l_n: Optional[int] = None,
+                       with_index: bool = False) -> SortStats:
+    """Analytic traffic of :func:`fractal_sort` (feeds the b_eff benchmark).
+
+    Per 16-bit pass: one streaming read of the keys, one write of entry
+    payloads (trailing bits only, rounded to whole bytes; zero when the
+    trie covers the field), one write of the output reconstructed from bin
+    positions.  The tapered trie lives on-chip (VMEM/LLC) and is counted
+    once in ``histogram_bytes``, not in DRAM traffic — the paper's p=16
+    claim that the compressed histogram fits entirely in LLC (§IV.F.1).
+    """
+    if l_n is None:
+        l_n = ft.trie_depth(n, min(p, 16))
+    passes = max(1, math.ceil(p / 16))
+    kb = _key_bytes(p)
+    trailing_bits = max(0, min(p, 16) - l_n)
+    trailing_bytes = (trailing_bits + 7) // 8 if trailing_bits else 0
+    bytes_read = passes * n * kb  # key stream, once per pass
+    bytes_written = passes * n * trailing_bytes + n * kb  # entries + output
+    if with_index:
+        # stable payload tracking (paper Alg. 5): the index array maps each
+        # sorted slot to its arrival position; width tapers with the intra-
+        # bin count (<= 2 bytes for the paper's regimes) — one write at
+        # rank time, one sequential read at reconstruction.
+        idx_bytes = 2 if (l_n >= ft.ceil_log2(n) - 16) else 4
+        bytes_written += passes * n * idx_bytes
+        bytes_read += passes * n * idx_bytes
+    h_bytes = sum(
+        (1 << l) * jnp.dtype(ft.tapered_dtype(l, ft.ceil_log2(n))).itemsize
+        for l in range(l_n + 1)
+    )
+    return SortStats(
+        n=n, p=p, l_n=l_n, passes=passes,
+        bytes_read=bytes_read, bytes_written=bytes_written,
+        histogram_bytes=int(h_bytes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rank: batch-streamed stable ranks with cached histogram carry
+# ---------------------------------------------------------------------------
+
+
+def fractal_rank(
+    prefix: jnp.ndarray,
+    n_bins: int,
+    batch: int = 1024,
+    carry_in: Optional[jnp.ndarray] = None,
+    bin_start: Optional[jnp.ndarray] = None,
+):
+    """Stable output position for each key given its bin id ``prefix``.
+
+    ``rank[i] = bin_start[prefix[i]] + carry[prefix[i]] + arrivals before i``
+    — the scatter-index computation of a counting/radix sort, evaluated as a
+    scan over fixed batches.  ``carry_in`` lets callers stream several key
+    batches through one cached histogram (paper §III.D); ``bin_start`` may
+    be supplied when the global histogram is already known (e.g. after the
+    psum merge in the distributed sort).
+
+    Returns ``(rank, counts, carry_out)``.
+    """
+    n = prefix.shape[0]
+    prefix = prefix.astype(jnp.int32)
+    if carry_in is None:
+        carry_in = jnp.zeros((n_bins,), jnp.int32)
+    # Inherit the data's varying-manual-axes so the scan carry typechecks
+    # under shard_map (JAX >= 0.8 VMA tracking); no-op numerically.
+    carry_in = carry_in + prefix[0] * 0
+    # Bound the materialized one-hot tile (batch x n_bins) to ~8 MiB so wide
+    # leaf levels (2**16 bins) trade batch length for tile width — the same
+    # locality/parallelism trade the paper tunes in §III.C.
+    batch = min(batch, max(8, (1 << 21) // max(n_bins, 1)), max(n, 1))
+    pad = (-n) % batch
+    # Padding uses bin id ``n_bins`` which matches no one-hot column, so
+    # padded rows contribute nothing to counts or carries.
+    prefix_p = jnp.concatenate([prefix, jnp.full((pad,), n_bins, jnp.int32)]) if pad else prefix
+    chunks = prefix_p.reshape(-1, batch)
+    bins = jnp.arange(n_bins, dtype=jnp.int32)
+
+    def body(carry, chunk):
+        # one-hot (batch, n_bins): on TPU this feeds the MXU (ones @ onehot
+        # for counts, strict-lower-triangular @ onehot for running arrivals).
+        onehot = (chunk[:, None] == bins[None, :]).astype(jnp.int32)
+        running = jnp.cumsum(onehot, axis=0) - onehot  # arrivals before row i
+        intra = jnp.take_along_axis(running, jnp.clip(chunk, 0, n_bins - 1)[:, None], axis=1)[:, 0]
+        rank = carry[jnp.clip(chunk, 0, n_bins - 1)] + intra
+        return carry + onehot.sum(axis=0), rank
+
+    carry_out, ranks = jax.lax.scan(body, carry_in, chunks)
+    ranks = ranks.reshape(-1)[:n]
+    counts = carry_out - carry_in
+    if bin_start is None:
+        bin_start = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]]
+        )
+    rank = bin_start[jnp.clip(prefix, 0, n_bins - 1)] + ranks
+    return rank, counts, carry_out
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+
+def keys_dtype(p: int):
+    return jnp.int32 if p <= 31 else jnp.uint32
+
+
+def reconstruct(counts: jnp.ndarray, trailing: jnp.ndarray, l_n: int, p: int,
+                lsb_tree_order: bool = False) -> jnp.ndarray:
+    """Algorithm 5 (FractalSortCPUA), vectorized.
+
+    ``trailing`` is the entry array already permuted to sorted order (the
+    index-array gather of Alg. 5 line 8); each output key is rebuilt as
+    ``bin_bits << t | trailing`` where the bin bits come from the bin
+    *position* — the l_n prefix bits never travel through memory.  With
+    ``lsb_tree_order=True`` bins are interpreted in the paper's LSB-first
+    tree-walk order and un-reversed with BitReverse (oracle-equivalence
+    tests); the MSB-first layout makes that the identity.
+    """
+    n = trailing.shape[0]
+    ends = jnp.cumsum(counts.astype(jnp.int32))
+    slot_bin = jnp.searchsorted(ends, jnp.arange(n, dtype=jnp.int32), side="right")
+    if lsb_tree_order:
+        slot_bin = ft.bit_reverse(slot_bin, l_n)
+    t = p - l_n
+    hi = slot_bin.astype(jnp.uint32) << t if t > 0 else slot_bin.astype(jnp.uint32)
+    return (hi | trailing.astype(jnp.uint32)).astype(keys_dtype(p))
+
+
+# ---------------------------------------------------------------------------
+# Public sorts
+# ---------------------------------------------------------------------------
+
+
+def _single_field_sort(keys: jnp.ndarray, p: int, depth: int, batch: int):
+    """Stable fractal counting sort of ``p<=16``-bit keys, trie depth
+    ``depth``.  When ``depth < p`` the trailing ``t = p-depth`` bits are
+    LSD-ordered first (a 2**t-bin pass), then the prefix pass groups bins;
+    entries carry only the trailing bits into reconstruction."""
+    n = keys.shape[0]
+    u = keys.astype(jnp.uint32)
+    t = p - depth
+    if t == 0:
+        rank, counts, _ = fractal_rank(u.astype(jnp.int32), 1 << depth, batch=batch)
+        # zero-payload entries: output from bin positions alone.
+        return reconstruct(counts, jnp.zeros((n,), jnp.uint32), depth, p)
+    trail = (u & ((1 << t) - 1)).astype(jnp.int32)
+    rank_t, _, _ = fractal_rank(trail, 1 << t, batch=batch)
+    by_trail = jnp.zeros_like(u).at[rank_t].set(u)
+    pref = (by_trail >> t).astype(jnp.int32)
+    rank_p, counts, _ = fractal_rank(pref, 1 << depth, batch=batch)
+    ent = jnp.zeros((n,), jnp.uint32).at[rank_p].set(by_trail & ((1 << t) - 1))
+    return reconstruct(counts, ent, depth, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "l_n", "batch"))
+def fractal_sort(keys: jnp.ndarray, p: int, l_n: Optional[int] = None,
+                 batch: int = 1024) -> jnp.ndarray:
+    """Sort integer keys in [0, 2**p) — one fractal pass for p<=16, two
+    stable 16-bit LSD passes for p<=32 ("compressed entries")."""
+    n = keys.shape[0]
+    if l_n is None:
+        l_n = ft.trie_depth(n, min(p, 16))
+    if p <= 16:
+        return _single_field_sort(keys, p, min(l_n, p), batch)
+    # p in (16, 32]: LSD over two 16-bit halves.
+    u = keys.astype(jnp.uint32)
+    lo = (u & 0xFFFF).astype(jnp.int32)
+    rank1, _, _ = fractal_rank(lo, 1 << 16, batch=batch)
+    u1 = jnp.zeros_like(u).at[rank1].set(u)  # stable by low half
+    hi_bits = p - 16
+    hi = (u1 >> 16).astype(jnp.int32)
+    rank2, counts2, _ = fractal_rank(hi, 1 << hi_bits, batch=batch)
+    # compressed entries: pass-2 payload is the low half only; the high
+    # bits are reconstructed from bin positions.
+    ent = jnp.zeros_like(u).at[rank2].set(u1 & 0xFFFF)
+    return reconstruct(counts2, ent, hi_bits, p)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "batch"))
+def fractal_argsort(keys: jnp.ndarray, p: int, batch: int = 1024) -> jnp.ndarray:
+    """Stable permutation ``perm`` with ``keys[perm]`` sorted (exact, full
+    ``p``-bit precision; p <= 16 single pass — the MoE dispatch form where
+    p = ceil(log2 E))."""
+    n = keys.shape[0]
+    assert p <= 16, "argsort form is the small-key dispatch path"
+    rank, _, _ = fractal_rank(keys.astype(jnp.int32), 1 << p, batch=batch)
+    return jnp.zeros((n,), jnp.int32).at[rank].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
+                         l_n: Optional[int] = None, batch: int = 1024):
+    """Streaming variant (paper §III.C/D): the input arrives in
+    ``num_batches`` equal slices; the trie histogram is *cached and merged*
+    across slices, then ranks stream through the shared carry and a single
+    scatter + reconstruct finishes.
+
+    Returns ``(sorted_keys, per-slice histograms)`` so tests can check the
+    merge telescopes: ``merge(h_1..h_B) == build(all keys)``.
+    """
+    n = keys.shape[0]
+    if l_n is None:
+        l_n = ft.trie_depth(n, min(p, 16))
+    depth = min(l_n, p)
+    t = p - depth
+    slices = jnp.array_split(keys, num_batches)
+    hists = [ft.build_histogram(s, p, depth) for s in slices]
+    merged = functools.reduce(ft.merge_histograms, hists)
+    counts = merged.leaf_counts
+    bin_start = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    carry = jnp.zeros(((1 << depth),), jnp.int32)
+    out = jnp.zeros((n,), keys.dtype)
+    for s in slices:
+        prefix = (s.astype(jnp.uint32) >> t).astype(jnp.int32)
+        rank, _, carry = fractal_rank(prefix, 1 << depth, batch=batch,
+                                      carry_in=carry, bin_start=bin_start)
+        out = out.at[rank].set(s)
+    if t > 0:
+        out = _single_field_sort(out, p, depth, batch)
+    return out, hists

@@ -1,0 +1,217 @@
+"""Implicit width-tapered binary-trie histogram — the paper's "fractal" structure.
+
+The CPU paper stores a pointer-linked sparse trie whose nodes below depth
+``L_c`` live at *computable* locations (Algorithm 4) and whose counters taper
+in width with depth (Algorithm 1).  On TPU the computable region is the whole
+dense structure: level ``l`` is a flat array of ``2**l`` counters indexed by
+the key's ``l``-bit MSB prefix.  (The paper walks LSB-first, which makes the
+leaf order the bit-reverse of numeric order and forces Algorithm 5's
+``BitReverse``; building MSB-first is the same implicit array relabeled so the
+leaf index *is* the numeric prefix.  ``bit_reverse`` is kept for the
+equivalence test ``leaf_lsb[bitrev(i)] == leaf_msb[i]``.)
+
+Counter-width tapering: a balanced subtree at level ``l`` holds about
+``n / 2**l`` keys, so its counter needs ``ceil(log2 n) - l`` bits (paper
+§III.D.1).  We taper per-level *storage/wire* dtypes to the narrowest of
+{uint8, uint16, uint32} with a skew margin, accumulate wide on-chip, and
+expose a saturation flag so callers can widen-on-demand (the paper's skew
+caveat, §IV.A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ceil_log2",
+    "trie_depth",
+    "tapered_dtype",
+    "tapered_bits",
+    "bit_reverse",
+    "FractalHistogram",
+    "build_histogram",
+    "merge_histograms",
+    "taper_levels",
+    "histogram_nbytes",
+    "get_item",
+    "get_index",
+]
+
+# Skew margin (extra bits) on top of the balanced-subtree width estimate.
+_TAPER_MARGIN_BITS = 2
+
+
+def ceil_log2(n: int) -> int:
+    """ceil(log2(n)) for n >= 1 (0 -> 0)."""
+    if n <= 1:
+        return 0
+    return (int(n) - 1).bit_length()
+
+
+def trie_depth(n: int, p: int, l_max: int = 16) -> int:
+    """L = min(p, ceil(log2 n)) (paper §III.B.1), capped at ``l_max``.
+
+    ``l_max`` bounds the dense leaf level to ``2**l_max`` counters — the
+    TPU analogue of the paper's configurable computable-region depth ``L_c``
+    (here sized so the leaf level fits VMEM: 2**16 x 4B = 256 KiB).
+    """
+    return max(1, min(p, ceil_log2(n), l_max))
+
+
+def tapered_bits(level: int, log2n: int, margin: int = _TAPER_MARGIN_BITS) -> int:
+    """Significant counter bits at ``level``: w_{c,l} = O(ceil(log2 n) - l)."""
+    return max(1, log2n - level + margin)
+
+
+def tapered_dtype(level: int, log2n: int, margin: int = _TAPER_MARGIN_BITS):
+    """Narrowest unsigned dtype holding ``tapered_bits`` (storage/wire only)."""
+    bits = tapered_bits(level, log2n, margin)
+    if bits <= 8:
+        return jnp.uint8
+    if bits <= 16:
+        return jnp.uint16
+    return jnp.uint32
+
+
+def bit_reverse(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Reverse the low ``width`` bits of ``x`` (Algorithm 5's BitReverse)."""
+    x = x.astype(jnp.uint32)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out | (((x >> i) & 1) << (width - 1 - i))
+    return out.astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FractalHistogram:
+    """All trie levels root→leaf.  ``levels[l]`` has ``2**l`` counters.
+
+    Counters are int32 while live (accumulation width); :func:`taper_levels`
+    produces the tapered storage/wire form and a saturation flag.
+    """
+
+    levels: tuple  # tuple[jnp.ndarray]; levels[l].shape == (2**l,)
+    p: int  # key precision in bits
+    depth: int  # leaf level index L (levels has L+1 entries, root=levels[0])
+
+    def tree_flatten(self):
+        return (self.levels,), (self.p, self.depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(levels=children[0], p=aux[0], depth=aux[1])
+
+    @property
+    def leaf_counts(self) -> jnp.ndarray:
+        return self.levels[-1]
+
+    @property
+    def total(self) -> jnp.ndarray:
+        return self.levels[0][0]
+
+
+def build_histogram(keys: jnp.ndarray, p: int, depth: int) -> FractalHistogram:
+    """Build the full trie bottom-up from the leaf bincount.
+
+    The per-key "path update" of the paper (one atomic RMW per level) is
+    replaced by an associative reduction: the leaf level is a bincount of the
+    ``depth``-bit MSB prefixes, and level ``l-1`` is the pairwise sum of level
+    ``l`` — mathematically identical to summing every key's path contribution,
+    with no contention at any level.
+    """
+    prefix = (keys.astype(jnp.uint32) >> (p - depth)).astype(jnp.int32)
+    leaf = jnp.zeros((1 << depth,), jnp.int32).at[prefix].add(1)
+    levels = [leaf]
+    cur = leaf
+    for _ in range(depth):
+        cur = cur.reshape(-1, 2).sum(axis=1)
+        levels.append(cur)
+    levels.reverse()
+    return FractalHistogram(levels=tuple(levels), p=p, depth=depth)
+
+
+def merge_histograms(a: FractalHistogram, b: FractalHistogram) -> FractalHistogram:
+    """Batch-streaming merge (paper §III.D): the cached histogram from batch
+    *t* is reused by batch *t+1* — a pure elementwise add per level."""
+    assert a.p == b.p and a.depth == b.depth
+    return FractalHistogram(
+        levels=tuple(x + y for x, y in zip(a.levels, b.levels)),
+        p=a.p,
+        depth=a.depth,
+    )
+
+
+def taper_levels(h: FractalHistogram, n_hint: int | None = None):
+    """Tapered storage/wire form: per-level narrow dtypes + saturation flag.
+
+    Returns ``(tapered_levels, saturated)`` where ``saturated`` is a traced
+    bool — True when any counter exceeded its tapered width (heavy skew),
+    signalling the caller to fall back to wide counters.
+    """
+    n = n_hint if n_hint is not None else int(1) << h.depth
+    log2n = ceil_log2(n)
+    tapered = []
+    saturated = jnp.asarray(False)
+    for l, lvl in enumerate(h.levels):
+        dt = tapered_dtype(l, log2n)
+        # clamp to what the live counter dtype can hold (uint32 taper can
+        # exceed int32 counters — then the taper is trivially lossless)
+        limit_val = min(jnp.iinfo(dt).max, jnp.iinfo(lvl.dtype).max)
+        limit = jnp.asarray(limit_val, lvl.dtype)
+        saturated = saturated | jnp.any(lvl > limit)
+        tapered.append(jnp.clip(lvl, 0, limit).astype(dt))
+    return tuple(tapered), saturated
+
+
+def histogram_nbytes(h: FractalHistogram, tapered: bool, n_hint: int | None = None) -> int:
+    """Analytic storage footprint (bytes) — feeds the b_eff accounting."""
+    n = n_hint if n_hint is not None else int(1) << h.depth
+    log2n = ceil_log2(n)
+    total = 0
+    for l, lvl in enumerate(h.levels):
+        if tapered:
+            itemsize = jnp.dtype(tapered_dtype(l, log2n)).itemsize
+        else:
+            itemsize = lvl.dtype.itemsize
+        total += int(lvl.shape[0]) * itemsize
+    return total
+
+
+def get_item(h: FractalHistogram, index: jnp.ndarray) -> jnp.ndarray:
+    """Value (leaf prefix) at sorted ``index`` — Algorithm 2, vectorized.
+
+    Walks root→leaf; at each node the child is chosen by comparing the
+    remaining index against the left-child count.  O(depth) gathers.
+    """
+    index = jnp.asarray(index, jnp.int32)
+    node = jnp.zeros_like(index)  # node id within its level
+    rem = index
+    for l in range(1, h.depth + 1):
+        left = h.levels[l][2 * node]
+        go_right = rem >= left
+        rem = jnp.where(go_right, rem - left, rem)
+        node = 2 * node + go_right.astype(jnp.int32)
+    return node
+
+
+def get_index(h: FractalHistogram, value: jnp.ndarray) -> jnp.ndarray:
+    """First sorted index of leaf ``value`` — Algorithm 3, vectorized.
+
+    Walks the value's bit path, accumulating left-sibling counts.  O(depth)
+    — the paper's O(p) improvement over binary-searching a sorted array.
+    """
+    value = jnp.asarray(value, jnp.int32)
+    idx = jnp.zeros_like(value)
+    node = jnp.zeros_like(value)
+    for l in range(1, h.depth + 1):
+        bit = (value >> (h.depth - l)) & 1
+        left = h.levels[l][2 * node]
+        idx = idx + jnp.where(bit == 1, left, 0)
+        node = 2 * node + bit
+    return idx

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: stable fractal rank (scatter-index) computation.
+
+For each key, its final output slot:
+
+    rank[i] = bin_start[key[i]] + carry[key[i]] + (earlier equal keys in tile)
+
+where ``carry`` is the running per-bin count of all previous tiles — the
+batch-streaming cached histogram of paper §III.C/D, held in a VMEM scratch
+across the sequential grid.  The kernel is *gather-free*: every per-key
+lookup is phrased through the one-hot matrix so it maps onto the MXU /
+VPU instead of serialized VMEM gathers:
+
+    base  = onehot @ (bin_start + carry)          # (block,)
+    intra = rowsum(strict_running_onehot * onehot)
+    rank  = base + intra
+
+One read of the key stream, one write of the rank stream; the carry never
+leaves VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 1024
+
+
+def _rank_kernel(keys_ref, bin_start_ref, rank_ref, carry_ref, *,
+                 n_bins: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    keys = keys_ref[...]  # (block,)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block, n_bins), 1)
+    onehot = (keys[:, None] == cols).astype(jnp.int32)
+    running = jnp.cumsum(onehot, axis=0) - onehot  # strictly-before count
+    intra = (running * onehot).sum(axis=1)
+    base = onehot @ (bin_start_ref[...] + carry_ref[...])
+    rank_ref[...] = base + intra
+    carry_ref[...] += onehot.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def fractal_rank_kernel(keys: jnp.ndarray, bin_start: jnp.ndarray,
+                        n_bins: int, block: int = DEFAULT_BLOCK,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Stable output slot per key given precomputed exclusive bin starts.
+
+    ``keys``: 1-D int32 in [0, n_bins) (pad with -1: padded ranks emit
+    garbage at padded slots, callers slice).  ``bin_start``: (n_bins,) int32.
+    """
+    n = keys.shape[0]
+    pad = (-n) % block
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), -1, keys.dtype)])
+    grid = keys.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_rank_kernel, n_bins=n_bins, block=block),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n_bins,), lambda i: (0,)),  # resident all grid
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((keys.shape[0],), jnp.int32),
+        scratch_shapes=[pltpu_scratch((n_bins,), jnp.int32)],
+        interpret=interpret,
+    )(keys.astype(jnp.int32), bin_start.astype(jnp.int32))
+    return out[:n]
+
+
+def pltpu_scratch(shape, dtype):
+    """VMEM scratch allocation (interpret-safe)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

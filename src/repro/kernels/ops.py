@@ -1,0 +1,103 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are written for the TPU target and validated by executing the
+kernel bodies in interpret mode against the ``ref.py`` oracles).  On a real
+TPU backend the flag flips to compiled automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fractal_histogram import fractal_histogram as _hist
+from repro.kernels.fractal_rank import fractal_rank_kernel as _rank
+from repro.kernels.fractal_reconstruct import fractal_reconstruct as _recon
+from repro.kernels.flash_attention import flash_attention_kernel as _flash
+from repro.kernels.moe_dispatch import moe_dispatch as _dispatch
+
+__all__ = [
+    "default_interpret",
+    "flash_attention",
+    "histogram",
+    "rank",
+    "reconstruct",
+    "moe_dispatch",
+    "fractal_sort_kernel",
+]
+
+
+@functools.cache
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q,
+                  block_kv=block_kv, interpret=interpret)
+
+
+def histogram(keys, n_bins: int, block: int = 1024, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _hist(keys, n_bins, block=block, interpret=interpret)
+
+
+def rank(keys, bin_start, n_bins: int, block: int = 1024, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _rank(keys, bin_start, n_bins, block=block, interpret=interpret)
+
+
+def reconstruct(counts, trailing, n_bins: int, t_bits: int,
+                block: int = 1024, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _recon(counts, trailing, n_bins, t_bits, block=block,
+                  interpret=interpret)
+
+
+def moe_dispatch(expert_ids, num_experts: int, block: int = 1024,
+                 interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _dispatch(expert_ids, num_experts, block=block,
+                     interpret=interpret)
+
+
+def fractal_sort_kernel(keys, p: int, block: int = 1024, interpret=None):
+    """End-to-end kernel-path sort for keys in [0, 2**p), p <= 16 one pass.
+
+    histogram → exclusive scan → rank → scatter trailing → reconstruct;
+    the composition the paper calls FractalSortCPU(A).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n = keys.shape[0]
+    import math
+
+    from repro.core import fractal_tree as ft
+
+    l_n = ft.trie_depth(n, min(p, 16))
+    depth = min(l_n, p)
+    t = p - depth
+    u = keys.astype(jnp.uint32)
+    if t > 0:
+        # LSD: order trailing bits first (small 2**t-bin pass).
+        trail = (u & ((1 << t) - 1)).astype(jnp.int32)
+        counts_t = histogram(trail, 1 << t, block=block, interpret=interpret)
+        start_t = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts_t)[:-1]])
+        rank_t = rank(trail, start_t, 1 << t, block=block, interpret=interpret)
+        u = jnp.zeros_like(u).at[rank_t].set(u)
+    pref = (u >> t).astype(jnp.int32)
+    counts = histogram(pref, 1 << depth, block=block, interpret=interpret)
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rk = rank(pref, start, 1 << depth, block=block, interpret=interpret)
+    trailing = jnp.zeros((n,), jnp.int32).at[rk].set(
+        (u & ((1 << t) - 1)).astype(jnp.int32)) if t > 0 else jnp.zeros((n,), jnp.int32)
+    out = reconstruct(counts, trailing, 1 << depth, t, block=block,
+                      interpret=interpret)
+    return out.astype(keys.dtype)

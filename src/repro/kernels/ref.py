@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def histogram_ref(keys: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Bincount; out-of-range keys (padding) ignored."""
+    valid = (keys >= 0) & (keys < n_bins)
+    return jnp.zeros((n_bins,), jnp.int32).at[
+        jnp.where(valid, keys, n_bins)].add(
+        valid.astype(jnp.int32), mode="drop")
+
+
+def rank_ref(keys: jnp.ndarray, bin_start: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Stable scatter slots via argsort-of-argsort (XLA comparison sort)."""
+    perm = jnp.argsort(keys, stable=True)  # sorted -> arrival
+    n = keys.shape[0]
+    rank_rel = jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))  # arrival -> sorted (0-based dense)
+    # dense rank counts every earlier key; convert to bin-relative slots.
+    counts = histogram_ref(keys, n_bins)
+    dense_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    intra = rank_rel - dense_start[jnp.clip(keys, 0, n_bins - 1)]
+    return bin_start[jnp.clip(keys, 0, n_bins - 1)] + intra
+
+
+def reconstruct_ref(counts: jnp.ndarray, trailing: jnp.ndarray,
+                    t_bits: int) -> jnp.ndarray:
+    """Algorithm 5 oracle: repeat bin ids by counts, or with trailing bits."""
+    n = trailing.shape[0]
+    ends = jnp.cumsum(counts.astype(jnp.int32))
+    slot_bin = jnp.searchsorted(ends, jnp.arange(n, dtype=jnp.int32),
+                                side="right").astype(jnp.int32)
+    return (slot_bin << t_bits) | trailing.astype(jnp.int32)
+
+
+def moe_dispatch_ref(expert_ids: jnp.ndarray, num_experts: int):
+    """argsort-based dispatch (what frameworks usually do)."""
+    T = expert_ids.shape[0]
+    perm = jnp.argsort(expert_ids, stable=True).astype(jnp.int32)
+    rank = jnp.zeros((T,), jnp.int32).at[perm].set(
+        jnp.arange(T, dtype=jnp.int32))
+    counts = histogram_ref(expert_ids, num_experts)
+    return perm, rank, counts
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """Naive softmax attention oracle.  q/k/v: (B, S, H, hd)."""
+    import math
+
+    import jax
+
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        mask = (jnp.arange(Skv)[None, :] > jnp.arange(Sq)[:, None])
+        s = jnp.where(mask[None, None], -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove `.lower().compile()` for every
+(architecture x input-shape x mesh) cell on placeholder devices.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the production meshes need 512 host devices.  Everything here is
+ShapeDtypeStruct-based — no parameter or activation is ever allocated.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out-dir DIR]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim as O
+from repro import sharding as SH
+from repro import train_lib as TL
+from repro.configs import get_config, list_configs
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import act_sharding
+from repro.models import transformer as T
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+PARAM_DTYPE = jnp.bfloat16
+WHISPER_CROSS_LEN = 1500  # whisper's native encoder frame budget
+
+
+def cell_supported(cfg, shape_name: str):
+    """(supported, reason).  Skips are part of the assignment contract."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: no sub-quadratic mixer in "
+                       "the published config; 0.5M-token dense decode is "
+                       "outside its operating envelope (DESIGN.md §6)")
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if sh["kind"] in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if sh["kind"] == "train":
+            batch["labels"] = sds((B, S), jnp.int32)
+        if cfg.frontend == "audio":
+            batch["frontend"] = sds((B, S, cfg.d_model), PARAM_DTYPE)
+        elif cfg.frontend == "patch":
+            batch["frontend"] = sds((B, cfg.num_patches, cfg.d_model),
+                                    PARAM_DTYPE)
+        return batch
+    # decode: one new token against an S-long cache
+    token = sds((B, 1), jnp.int32)
+    pos = sds((), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, PARAM_DTYPE))
+    out = {"token": token, "pos": pos, "cache": cache}
+    if cfg.encoder_layers:
+        hd = cfg.resolved_head_dim
+        kv = sds((cfg.repeats, B, WHISPER_CROSS_LEN, cfg.n_kv_heads, hd),
+                 PARAM_DTYPE)
+        out["cross_kv"] = {f"b{i}": {"ck": kv, "cv": kv}
+                           for i in range(len(cfg.pattern))}
+    return out
+
+
+def _opt_config(cfg):
+    # counter-width-tapered moments for the very large cells (DESIGN.md §5)
+    big = cfg.params_count() > 30e9
+    return O.OptimizerConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True, overrides: Optional[dict] = None):
+    import dataclasses
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    sh = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    # pin activations batch-sharded through the layer scan (GSPMD would
+    # otherwise propagate the FSDP weight sharding into activations).
+    if sh["batch"] % SH.dp_size(mesh) == 0:
+        act_sharding.set_batch_axes(SH.batch_axes(mesh), mesh)
+    else:
+        act_sharding.set_batch_axes(None)
+
+    params = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, dtype=PARAM_DTYPE))
+    p_spec = SH.param_specs(params, cfg, mesh)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec)
+    rep = NamedSharding(mesh, P())
+    ins = input_specs(arch, shape_name)
+
+    if sh["kind"] == "train":
+        oc = _opt_config(cfg)
+        opt = jax.eval_shape(lambda: O.init_opt_state(params, oc))
+        o_sh = {"mu": p_sh, "nu": p_sh, "step": rep}
+        b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            SH.data_specs(mesh, ins))
+        step = TL.make_train_step(cfg, oc, interpret=True)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, rep),
+                donate_argnums=(0, 1),
+            ).lower(params, opt, ins)
+    elif sh["kind"] == "prefill":
+        b_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            SH.data_specs(mesh, ins))
+        axes = SH.batch_axes(mesh)
+        v_ax = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        out_sh = NamedSharding(mesh, P(axes, None, v_ax))
+        step = TL.make_prefill_step(cfg, interpret=True)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh), out_shardings=out_sh,
+            ).lower(params, ins)
+    else:  # decode
+        B = sh["batch"]
+        kv_seq_shard = B % SH.dp_size(mesh) != 0
+        # Serving param policy (§Perf deepseek-decode iteration 2): with
+        # FSDP'd weights every decode step re-gathers the whole model over
+        # ICI.  When the TP-only shard fits HBM next to the KV cache, keep
+        # weights resident (sharded over `model` alone); only models too
+        # big for that (grok-314b) pay the per-step FSDP gather.
+        if cfg.params_count() * 2 / mesh.shape["model"] < 10e9:
+            import dataclasses as _dc
+
+            p_spec = SH.param_specs(params, _dc.replace(cfg, fsdp=False),
+                                    mesh)
+            p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec)
+        c_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            SH.cache_specs(mesh, ins["cache"], B, kv_seq_shard))
+        t_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            SH.data_specs(mesh, {"t": ins["token"]}))["t"]
+        step = TL.make_decode_step(cfg)
+        args = [ins["token"], ins["pos"], ]
+        if "cross_kv" in ins:
+            x_sh = jax.tree.map(lambda _: rep, ins["cross_kv"])
+
+            def step_fn(params, cache, token, pos, cross_kv):
+                return step(params, cache, token, pos, cross_kv=cross_kv)
+
+            with mesh:
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(p_sh, c_sh, t_sh, rep, x_sh),
+                    out_shardings=(t_sh, c_sh),
+                    donate_argnums=(1,),
+                ).lower(params, ins["cache"], ins["token"], ins["pos"],
+                        ins["cross_kv"])
+        else:
+            with mesh:
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_sh, c_sh, t_sh, rep),
+                    out_shardings=(t_sh, c_sh),
+                    donate_argnums=(1,),
+                ).lower(params, ins["cache"], ins["token"], ins["pos"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    stats = hlo_stats.analyze(hlo)
+    colls = stats["collectives"]
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": sh["kind"],
+        "compile_seconds": round(compile_s, 1),
+        # loop-aware walker totals (cost_analysis counts while bodies once)
+        "flops_per_device": stats["flops"],
+        "bytes_read_per_device": stats["bytes_read"],
+        "bytes_written_per_device": stats["bytes_written"],
+        "xla_flops_static": float(cost.get("flops", -1.0)),
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", -1),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", -1),
+        },
+        "params_total": get_config(arch).params_count(),
+        "params_active": get_config(arch).active_params_count(),
+    }
+    if verbose:
+        m = result["memory"]
+        per_dev_gib = (m["argument_bytes"] + m["temp_bytes"]
+                       + m["output_bytes"] - m["alias_bytes"]) / 2**30
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile {compile_s:.1f}s, "
+              f"flops/dev {result['flops_per_device']:.3e}, "
+              f"rd/wr GiB {result['bytes_read_per_device']/2**30:.1f}/"
+              f"{result['bytes_written_per_device']/2**30:.1f}, "
+              f"mem/dev ~{per_dev_gib:.2f} GiB, "
+              f"collective wire {colls['total_wire_bytes']/2**30:.3f} GiB "
+              f"({colls['count']} ops)")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override, e.g. --override mlstm_chunk=0")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("true", "false"):
+            overrides[k] = v == "true"
+        else:
+            try:
+                overrides[k] = float(v) if "." in v else int(v)
+            except ValueError:
+                overrides[k] = v
+
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape in shapes:
+            ok, reason = cell_supported(cfg, shape)
+            if not ok:
+                print(f"[dryrun] SKIP {arch} x {shape}: {reason}")
+                continue
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                out_path = os.path.join(args.out_dir, tag + ".json")
+                try:
+                    res = lower_cell(arch, shape, mp, overrides=overrides)
+                    with open(out_path, "w") as f:
+                        json.dump(res, f, indent=1)
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for t, e in failures:
+            print("  ", t, e)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,401 @@
+"""Parse collective traffic out of (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so the roofline
+collective term is derived here: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute op is sized from its
+result shape and costed with a ring model over its replica-group size.
+
+Loop awareness: scan-over-layers lowers to ``while`` — a collective inside
+the body *executes trip-count times* (e.g. one FSDP all-gather per layer,
+95x for deepseek).  The parser builds the computation graph, estimates each
+while's trip count from its condition's integer constants, and multiplies
+nested collectives through (products for nested loops).
+
+Reported bytes are *per-device wire bytes* (what one chip's ICI links must
+carry): with group size D and payload P,
+
+    all-reduce          2 * P * (D-1)/D    (reduce-scatter + all-gather)
+    all-gather          P_result * (D-1)/D
+    reduce-scatter      P_input  * (D-1)/D  (~= P_result * (D-1))
+    all-to-all          P * (D-1)/D
+    collective-permute  P
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# result shapes may be tuples containing /*index=N*/ comments (embedded
+# '='), so capture lazily up to the op name.
+_COLL_RE = re.compile(
+    r"=\s*(.+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?(?:\.\d+)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float  # per-device ring-model bytes, x loop multiplier
+    multiplier: int = 1
+
+
+def _result_bytes(shape_str: str) -> int:
+    """Total bytes of a result shape string, incl. tuple shapes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        return s if s > 0 else default
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        return len([x for x in first.split(",") if x.strip() != ""])
+    return default
+
+
+def _split_computations(text: str) -> dict:
+    """HLO computations are not nested in text form: a header line ends
+    with '{' (params may contain nested tuple parens, so no paren regex),
+    the body runs until a lone '}'."""
+    comps: dict = {}
+    name = None
+    entry = None
+    for line in text.splitlines():
+        st = line.strip()
+        if name is None:
+            if st.endswith("{") and ("->" in st or st.startswith("ENTRY")):
+                head = st[5:].strip() if st.startswith("ENTRY") else st
+                nm = head.split()[0].split("(")[0].lstrip("%")
+                if nm:
+                    name = nm
+                    comps[name] = []
+                    if st.startswith("ENTRY"):
+                        entry = name
+        elif st == "}":
+            name = None
+        else:
+            comps[name].append(line.rstrip())
+    return {"comps": {k: "\n".join(v) for k, v in comps.items()},
+            "entry": entry}
+
+
+def _trip_count(cond_text: str) -> int:
+    consts = [int(c) for c in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def _wire_bytes(kind: str, rb: int, d: int) -> float:
+    if kind == "all-reduce":
+        return 2.0 * rb * (d - 1) / d
+    if kind == "all-gather":
+        return rb * (d - 1) / d
+    if kind == "reduce-scatter":
+        return float(rb) * (d - 1)
+    if kind == "all-to-all":
+        return rb * (d - 1) / d
+    return float(rb)  # collective-permute
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1):
+    """Extract every collective with loop-multiplied per-device wire bytes."""
+    sp = _split_computations(hlo_text)
+    comps, entry = sp["comps"], sp["entry"]
+    ops: list = []
+    visited_stack: set = set()
+
+    def walk(comp_name: str, mult: int):
+        if comp_name not in comps or comp_name in visited_stack:
+            return
+        visited_stack.add(comp_name)
+        text = comps[comp_name]
+        for line in text.splitlines():
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)  # XLA-annotated trip count
+                tc = int(tm.group(1)) if tm else _trip_count(comps.get(cond, ""))
+                walk(body, mult * tc)
+                continue
+            cm = _COLL_RE.search(line)
+            if cm:
+                if cm.group(3) == "-done":
+                    continue  # async pair: count the start only
+                kind = cm.group(2)
+                rb = _result_bytes(cm.group(1))
+                # XLA:CPU promotes bf16 reductions to f32 ("*_promoted"
+                # apply computations); the TPU target reduces in bf16, so
+                # count those at half width.
+                if "_promoted" in line and "f32[" in line:
+                    rb //= 2
+                d = max(1, _group_size(line, default_group))
+                ops.append(CollectiveOp(
+                    kind, rb, d, _wire_bytes(kind, rb, d) * mult, mult))
+            for call in _CALL_RE.findall(line):
+                if "fused" not in call:  # no collectives inside fusions
+                    walk(call, mult)
+        visited_stack.discard(comp_name)
+
+    if entry:
+        walk(entry, 1)
+    else:  # fallback: flat scan, no loop multipliers
+        for line in hlo_text.splitlines():
+            cm = _COLL_RE.search(line)
+            if cm and cm.group(3) != "-done":
+                kind = cm.group(2)
+                rb = _result_bytes(cm.group(1))
+                d = max(1, _group_size(line, default_group))
+                ops.append(CollectiveOp(kind, rb, d, _wire_bytes(kind, rb, d)))
+    return ops
+
+
+def summarize(ops):
+    by_kind: dict = {}
+    for op in ops:
+        rec = by_kind.setdefault(op.kind, {"count": 0, "wire_bytes": 0.0,
+                                           "result_bytes": 0})
+        rec["count"] += 1
+        rec["wire_bytes"] += op.wire_bytes
+        rec["result_bytes"] += op.result_bytes
+    total = sum(r["wire_bytes"] for r in by_kind.values())
+    return {"by_kind": by_kind, "total_wire_bytes": total,
+            "count": sum(r["count"] for r in by_kind.values())}
+
+
+# ---------------------------------------------------------------------------
+# loop-aware whole-program analysis: FLOPs + HBM-traffic model
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(?:ENTRY\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMS_RE = re.compile(r"\w+\[([\d,]*)\]")
+
+# ops that move no HBM data (aliases, metadata, control)
+_FREE_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "domain",
+             "opt-barrier"}
+
+
+def _build_shape_map(text: str) -> dict:
+    shapes = {}
+    for line in text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = _result_bytes(m.group(2))
+    return shapes
+
+
+def _dot_flops(line: str, shapes_by_name: dict) -> float:
+    """2 x prod(result dims) x prod(lhs contracting dim sizes)."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    result_dims = []
+    dm = _DIMS_RE.search(m.group(2))
+    if dm:
+        result_dims = [int(d) for d in dm.group(1).split(",") if d]
+    # lhs operand shape
+    ops = _OPERAND_RE.findall(line.split("dot(", 1)[1])
+    lhs_name = ops[0] if ops else None
+    lc = _LHS_CONTRACT_RE.search(line)
+    if lhs_name is None or lc is None:
+        return 0.0
+    lhs_line = shapes_by_name.get("__line__" + lhs_name)
+    if lhs_line is None:
+        return 0.0
+    ldm = _DIMS_RE.search(lhs_line)
+    if not ldm:
+        return 0.0
+    lhs_dims = [int(d) for d in ldm.group(1).split(",") if d]
+    k = 1
+    for idx in (int(i) for i in lc.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    out = 1
+    for d in result_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+def analyze(hlo_text: str, default_group: int = 1) -> dict:
+    """Loop-aware program totals (per device):
+
+      flops          — 2MNK summed over every dot, x loop trip counts
+      bytes_written  — sum of op result bytes (fusion-level ~ HBM writes)
+      bytes_read     — sum of op operand bytes (fusion-level ~ HBM reads)
+      collectives    — summarize(parse_collectives(...)), loop-aware
+
+    ``cost_analysis()`` counts while bodies ONCE; scan-over-layers makes
+    that off by the layer count, hence this walker.
+    """
+    sp = _split_computations(hlo_text)
+    comps, entry = sp["comps"], sp["entry"]
+
+    # def-site shape map: name -> bytes, and name -> raw line (for dots)
+    shape_bytes: dict = {}
+    line_map: dict = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shape_bytes[m.group(1)] = _result_bytes(m.group(2))
+            line_map["__line__" + m.group(1)] = m.group(2)
+
+    totals = {"flops": 0.0, "bytes_read": 0.0, "bytes_written": 0.0}
+    stack: set = set()
+
+    _param_def = re.compile(
+        r"%?(param[\w.\-]*)\s*=\s*(\(.*?\)|\S+)\s+parameter\((\d+)\)")
+    _slice_ops = ("dynamic-slice", "slice", "gather")
+
+    _DUS_RE = re.compile(
+        r"=\s*(\(.*?\)|\S+)\s+dynamic-update-slice\(([^)]*)\)")
+
+    def fusion_dus_write(comp_text: str, fusion_rb: int):
+        """If the fusion materializes a dynamic-update-slice of a buffer
+        the same size as the fusion result, only the *update* slice hits
+        HBM (XLA aliases the buffer in place — scan-output stacking).
+        Returns the update bytes, else None."""
+        def elems(shape_str: str) -> int:
+            n = 0
+            for _, dims in _SHAPE_RE.findall(shape_str):
+                e = 1
+                for d in dims.split(","):
+                    if d:
+                        e *= int(d)
+                n += e
+            return n
+
+        best = None
+        for m in _DUS_RE.finditer(comp_text):
+            # same element count as the fusion result (dtype may convert)
+            if elems(m.group(1)) * 4 < fusion_rb:
+                continue
+            ops_ = _OPERAND_RE.findall(m.group(2))
+            if len(ops_) < 2:
+                continue
+            dm = re.search(r"%?" + re.escape(ops_[1]) +
+                           r"\s*=\s*(\(.*?\)|\S+)\s+[\w\-]+", comp_text)
+            if dm:
+                ub = _result_bytes(dm.group(1))
+                best = ub if best is None else max(best, ub)
+        return best
+
+    def fusion_param_read(comp_text: str, idx: int, full_bytes: int) -> float:
+        """Bytes a fusion really reads of parameter ``idx``: if every use is
+        a (dynamic-)slice/gather, only the slice leaves HBM."""
+        pname = None
+        for pm in _param_def.finditer(comp_text):
+            if int(pm.group(3)) == idx:
+                pname = pm.group(1)
+                break
+        if pname is None:
+            return full_bytes
+        sliced = 0
+        for line in comp_text.splitlines():
+            if ("%" + pname) not in line.split("=", 1)[-1]:
+                continue
+            dm = _DEF_RE.match(line)
+            if dm is None or dm.group(1) == pname:
+                continue
+            if dm.group(3) in _slice_ops:
+                sliced = max(sliced, _result_bytes(dm.group(2)))
+            else:
+                return full_bytes  # consumed wholesale somewhere
+        return sliced if sliced else full_bytes
+
+    def walk(comp_name: str, mult: float):
+        if comp_name not in comps or comp_name in stack:
+            return
+        stack.add(comp_name)
+        for line in comps[comp_name].splitlines():
+            wm = _WHILE_RE.search(line)  # before _DEF_RE: tuple results
+            if wm:
+                tm = _TRIP_RE.search(line)
+                tc = int(tm.group(1)) if tm else _trip_count(
+                    comps.get(wm.group(1), ""))
+                walk(wm.group(2), mult * tc)
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            opname = m.group(3)
+            if opname in _FREE_OPS:
+                continue
+            if opname in ("call", "conditional", "while"):
+                for call in _CALL_RE.findall(line):
+                    walk(call, mult)
+                continue
+            if opname == "dot":
+                totals["flops"] += _dot_flops(line, line_map) * mult
+            rb = _result_bytes(m.group(2))
+            paren = line.find("(", line.find(opname))
+            args = (line[paren + 1:line.find(")", paren)] if paren >= 0
+                    else "")
+            operands = _OPERAND_RE.findall(args)
+            # slicing ops touch only the slice, not the backing buffer
+            if opname in ("dynamic-slice", "gather", "slice"):
+                totals["bytes_read"] += rb * mult
+                totals["bytes_written"] += rb * mult
+                continue
+            if opname in ("dynamic-update-slice", "scatter"):
+                upd = (shape_bytes.get(operands[1], 0)
+                       if len(operands) > 1 else rb)
+                totals["bytes_read"] += upd * mult
+                totals["bytes_written"] += upd * mult
+                continue
+            # HBM model: fusion results are written once, operands read once
+            called = _CALL_RE.findall(line)
+            fused_text = comps.get(called[0], "") if (
+                opname == "fusion" and called) else None
+            wb = rb
+            if fused_text is not None:
+                dus = fusion_dus_write(fused_text, rb)
+                if dus is not None:
+                    wb = dus  # in-place update: only the slice hits HBM
+            totals["bytes_written"] += wb * mult
+            for i, ref in enumerate(operands):
+                fb = shape_bytes.get(ref, 0)
+                if wb != rb and fb * 2 >= rb:
+                    fb = wb  # dus-aliased buffer: only the slice is touched
+                elif fused_text is not None and fb > rb:
+                    fb = fusion_param_read(fused_text, i, fb)
+                totals["bytes_read"] += fb * mult
+        stack.discard(comp_name)
+
+    if entry:
+        walk(entry, 1.0)
+    colls = summarize(parse_collectives(hlo_text, default_group))
+    return {**totals, "collectives": colls}

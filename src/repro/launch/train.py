@@ -1,0 +1,133 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --smoke --steps 50 --ckpt-dir /tmp/ckpt
+
+Wires together: config registry → model init (sharded) → synthetic data
+pipeline → AdamW → jitted sharded train step → step journal + straggler
+monitor → async checkpointing → auto-resume.  ``--induce-failure N``
+crashes step N once to exercise the restart path end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as CK
+from repro import optim as O
+from repro import runtime as RT
+from repro import sharding as SH
+from repro import train_lib as TL
+from repro.configs import get_config, smoke_config
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--induce-failure", type=int, default=-1,
+                    help="crash this step once (tests auto-restart)")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+    mesh = make_host_mesh(args.data_mesh, args.model_mesh)
+    oc = O.OptimizerConfig(lr=args.lr, warmup_steps=10,
+                           total_steps=args.steps)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(key, cfg)
+    opt_state = O.init_opt_state(params, oc)
+    p_sh = SH.param_shardings(params, mesh, cfg)
+    params = jax.tree.map(jax.device_put, params, p_sh)
+
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                                  global_batch=args.global_batch,
+                                  seed=args.seed))
+    step_fn = TL.shard_train_step(
+        TL.make_train_step(cfg, oc), mesh, params, opt_state,
+        data.batch(0), cfg)
+
+    journal = RT.StepJournal(f"{args.ckpt_dir}/journal.jsonl")
+    monitor = RT.StragglerMonitor()
+    ckpt = CK.AsyncCheckpointer(args.ckpt_dir, keep=3)
+
+    # resume if a checkpoint exists
+    start = 0
+    latest = CK.latest_step(args.ckpt_dir)
+    if latest is not None:
+        state = CK.restore(args.ckpt_dir, latest,
+                           {"params": params, "opt": opt_state},
+                           {"params": p_sh, "opt": {
+                               "mu": p_sh, "nu": p_sh,
+                               "step": jax.tree.map(lambda _: None,
+                                                    opt_state["step"])}}
+                           if False else None)
+        params, opt_state = state["params"], state["opt"]
+        start = latest
+        print(f"[train] resumed from step {latest}")
+
+    state = {"params": params, "opt": opt_state}
+    failed_once = {"done": False}
+
+    def run_step(step: int):
+        if step == args.induce_failure and not failed_once["done"]:
+            failed_once["done"] = True
+            raise RuntimeError(f"induced failure at step {step}")
+        t0 = time.time()
+        batch = data.batch(step)
+        state["params"], state["opt"], metrics = step_fn(
+            state["params"], state["opt"], batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        straggler = monitor.observe(dt)
+        journal.append(step, loss=loss, step_time=dt, straggler=straggler)
+        if step % 10 == 0 or straggler:
+            tag = " STRAGGLER" if straggler else ""
+            print(f"[train] step {step} loss {loss:.4f} ({dt:.2f}s){tag}")
+        if step > 0 and step % args.ckpt_every == 0:
+            ckpt.save_async(step, {"params": state["params"],
+                                   "opt": state["opt"]})
+
+    def restore_latest() -> int:
+        ckpt.wait()
+        latest = CK.latest_step(args.ckpt_dir)
+        if latest is None:
+            return 0
+        restored = CK.restore(args.ckpt_dir, latest,
+                              {"params": state["params"],
+                               "opt": state["opt"]})
+        state["params"], state["opt"] = restored["params"], restored["opt"]
+        print(f"[train] restarted from step {latest}")
+        return latest
+
+    RT.run_with_restarts(run_step, start, args.steps - start,
+                         restore_latest, max_restarts=args.max_restarts,
+                         on_restart=lambda s, e: print(
+                             f"[train] step {s} failed: {e}; restoring"))
+    ckpt.wait()
+    print(f"[train] done; straggler count: {monitor.flagged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Activation sharding constraints (GSPMD guidance).
+
+Without explicit constraints, GSPMD happily propagates the FSDP weight
+sharding *into* activations (feature-sharded, batch-replicated) inside the
+layer scan — per-device activation memory then scales with the global
+batch.  ``constrain_batch(x)`` pins the canonical layout: leading batch dim
+over the DP axes, features unsharded (TP shards appear transiently inside
+attention/mlp via the weight contractions).
+
+The spec is process-global, set by the step builders (train_lib / dryrun)
+before tracing; when unset (CPU unit tests, no mesh) it is a no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[tuple] = None
+_MESH = None
+
+
+def set_batch_axes(axes: Optional[tuple], mesh=None):
+    """axes: e.g. ("pod", "data"), or None to disable constraints.
+    ``mesh`` enables shard_map-based per-shard paths (MoE dispatch)."""
+    global _BATCH_AXES, _MESH
+    _BATCH_AXES = tuple(axes) if axes else None
+    _MESH = mesh
+
+
+def get_batch_axes() -> Optional[tuple]:
+    return _BATCH_AXES
+
+
+def get_mesh():
+    return _MESH
+
+
+def _constrain(x, spec: P):
+    if isinstance(_MESH, jax.sharding.Mesh):
+        # concrete mesh: no ambient mesh context needed at call time
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(_MESH, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch(x):
+    """Constrain leading dim to the DP axes, rest replicated."""
+    if _BATCH_AXES is None:
+        return x
+    return _constrain(x, P(_BATCH_AXES, *((None,) * (x.ndim - 1))))
+
+
+def fsdp_gather(w, tp_dim: int):
+    """Per-layer FSDP weight gather: constrain a (sliced) 2-D weight to its
+    TP-only sharding, so XLA all-gathers the small weight over `data` once
+    per layer instead of all-reducing activation-sized partial sums on
+    every FSDP-sharded contraction (§Perf qwen3-moe iteration 3a).
+
+    ``tp_dim``: which dim stays sharded over `model` (-1 = column/out,
+    0 = row/in)."""
+    if _BATCH_AXES is None or w.ndim != 2:
+        return w
+    spec = P(None, "model") if tp_dim in (-1, 1) else P("model", None)
+    return _constrain(w, spec)

@@ -1,0 +1,312 @@
+"""Core transformer sublayers — pure-JAX pytrees, no framework deps.
+
+Attention is blockwise ("flash-style") over both query and KV chunks with a
+running max/denominator, so a 32k-token prefill never materializes an
+S x S score matrix — the memory_analysis of the dry-run reflects the real
+operating point.  Decode supports both batch-sharded KV caches and
+sequence-sharded caches (split-KV with an online-softmax psum combine) for
+the long-context cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.act_sharding import fsdp_gather
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) / half * math.log(theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k, groups: int):
+    # (B, S, KV, hd) -> (B, S, KV*groups, hd)
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def flash_attention(q, k, v, causal: bool, q_offset: int = 0,
+                    chunk_q: int = 1024, chunk_kv: int = 1024,
+                    bias_mask: Optional[jnp.ndarray] = None):
+    """Blockwise softmax attention (rematerialized backward).
+
+    Never materializes more than (B, H, chunk_q, chunk_kv) of scores —
+    including in the BACKWARD: without the jax.checkpoint wrapper the
+    transpose of the inner scans saves every f32 score block, i.e. the
+    full S^2 attention matrix (§Perf qwen3-moe iteration 2a).
+    """
+    impl = functools.partial(_flash_attention_impl, causal=causal,
+                             q_offset=q_offset, chunk_q=chunk_q,
+                             chunk_kv=chunk_kv)
+    return jax.checkpoint(
+        impl, policy=jax.checkpoint_policies.nothing_saveable)(q, k, v)
+
+
+def _flash_attention_impl(q, k, v, *, causal: bool, q_offset: int,
+                          chunk_q: int, chunk_kv: int):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, H, hd) (kv already repeated to H).
+    ``q_offset`` is the absolute position of q[0] (prefill resume)."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_kv, Skv)
+    # pad to multiples
+    pq = (-Sq) % cq
+    pk = (-Skv) % ck
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
+
+    qb = qp.reshape(B, nq, cq, H, hd).transpose(1, 0, 3, 2, 4)  # (nq,B,H,cq,hd)
+    kb = kp.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+    vb = vp.reshape(B, nk, ck, H, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, kv_and_idx):
+            m, l, acc = carry
+            (ki, vi), ik = kv_and_idx
+            s = jnp.einsum("bhqd,bhkd->bhqk", qi, ki,
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = ik * ck + jnp.arange(ck)
+            mask = k_pos[None, :] > q_pos[:, None] if causal else None
+            pad_mask = (k_pos >= Skv)[None, :]
+            neg = jnp.asarray(NEG_INF, s.dtype)
+            if mask is not None:
+                s = jnp.where(mask[None, None], neg, s)
+            s = jnp.where(pad_mask[None, None], neg, s)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        # remat the kv block body: scan-transpose would otherwise save the
+        # f32 (cq, ck) probability block of EVERY step — the full S^2
+        # matrix across the loop (§Perf qwen3-moe iteration 2a).
+        kv_step_r = jax.checkpoint(
+            kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step_r, (m0, l0, a0),
+            ((kb, vb), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))  # (nq,B,H,cq,hd)
+    out = ob.transpose(1, 0, 3, 2, 4).reshape(B, nq * cq, H, hd)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention sublayer
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), dtype)
+        p["k_scale"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, kv_x=None):
+    hd = cfg.resolved_head_dim
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    # gather the FSDP-sharded weights once per layer (cheap) instead of
+    # all-reducing activation-sized partial sums (§Perf iteration 3a)
+    q = (x @ fsdp_gather(p["wq"], -1)).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_x @ fsdp_gather(p["wk"], -1)).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = (kv_x @ fsdp_gather(p["wv"], -1)).reshape(B, Skv, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.rms_eps)
+        k = rms_norm(k, p["k_scale"], cfg.rms_eps)
+    return q, k, v
+
+
+def attn_apply(p, cfg: ModelConfig, x, *, causal: bool = True,
+               positions=None, kv_x=None, use_rope: bool = True,
+               chunk_q: int = 1024, chunk_kv: int = 1024):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, kv_x)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kv_pos = jnp.arange(k.shape[1])[None, :]
+        k = rope(k, kv_pos, cfg.rope_theta)
+    groups = cfg.n_heads // cfg.n_kv_heads
+    if getattr(cfg, "use_pallas_attention", False):
+        from repro.kernels import ops as _kops
+
+        out = _kops.flash_attention(
+            q, _repeat_kv(k, groups), _repeat_kv(v, groups),
+            causal=causal and kv_x is None,
+            block_q=chunk_q, block_kv=chunk_kv)
+    else:
+        out = flash_attention(q, _repeat_kv(k, groups), _repeat_kv(v, groups),
+                              causal=causal and kv_x is None,
+                              chunk_q=chunk_q, chunk_kv=chunk_kv)
+    out = out.reshape(B, S, -1) @ fsdp_gather(p["wo"], 0)
+    return out, (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos, *,
+                use_rope: bool = True, update_cache: bool = True,
+                kv_seq_axis: Optional[str] = None):
+    """Single-token decode.  x: (B, 1, D); cache_*: (B, S_max, KV, hd).
+
+    ``pos``: scalar int32 — current position.  When ``kv_seq_axis`` is set
+    the caches are sequence-sharded over that mesh axis and attention runs
+    as split-KV with an online-softmax combine (``psum``) — the
+    long-context sequence-parallel path.
+    """
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x)
+    if use_rope:
+        ppos = jnp.full((B, 1), pos)
+        q = rope(q, ppos, cfg.rope_theta)
+        k_new = rope(k_new, ppos, cfg.rope_theta)
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+    groups = cfg.n_heads // cfg.n_kv_heads
+
+    def _local_attend(q_, k_, v_, pos_base):
+        # q_: (B,1,H,hd); k_/v_: (B,S,KV,hd) local shard.  GQA via grouped
+        # einsum — materializing repeat_kv on a sharded cache forces an
+        # "involuntary full rematerialization" all-gather of the whole
+        # layer cache in GSPMD (§Perf deepseek-decode iteration 1).
+        Bq, Sq, H, _ = q_.shape
+        kv = k_.shape[2]
+        qg = q_.reshape(Bq, Sq, kv, groups, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_,
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        k_pos = pos_base + jnp.arange(k_.shape[1])
+        s = jnp.where((k_pos > pos)[None, None, None, None, :], NEG_INF, s)
+        m = s.max(axis=-1)
+        e = jnp.exp(s - m[..., None])
+        l = e.sum(axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", e, v_.astype(jnp.float32))
+        # back to (B, H, q, ...) layout
+        m = m.reshape(Bq, H, Sq)
+        l = l.reshape(Bq, H, Sq)
+        o = o.reshape(Bq, H, Sq, hd)
+        return m, l, o
+
+    if kv_seq_axis is None:
+        m, l, o = _local_attend(q, cache_k, cache_v, 0)
+        out = (o / jnp.maximum(l[..., None], 1e-30))
+    else:
+        # split-KV (sequence-parallel) decode: each shard attends to its
+        # slice, partial (m, l, o) combine with one psum round.
+        ax = kv_seq_axis
+        idx = jax.lax.axis_index(ax)
+        shard = cache_k.shape[1]
+        m, l, o = _local_attend(q, cache_k, cache_v, idx * shard)
+        g_m = jax.lax.pmax(m, ax)
+        corr = jnp.exp(m - g_m)
+        g_l = jax.lax.psum(l * corr, ax)
+        g_o = jax.lax.psum(o * corr[..., None], ax)
+        out = g_o / jnp.maximum(g_l[..., None], 1e-30)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, -1).astype(x.dtype) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], cfg.d_model, d_ff, dtype),
+         "wd": dense_init(ks[1], d_ff, cfg.d_model, dtype)}
+    if cfg.act not in ("relu2", "gelu_plain"):  # gated variants
+        p["wg"] = dense_init(ks[2], cfg.d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p, cfg: ModelConfig, x):
+    h = x @ fsdp_gather(p["wi"], -1)
+    if cfg.act == "relu2":  # nemotron squared-ReLU, non-gated
+        h = jnp.square(jax.nn.relu(h))
+    elif cfg.act == "gelu_plain":  # whisper-style, non-gated
+        h = jax.nn.gelu(h)
+    elif cfg.act == "gelu":  # GeGLU (grok)
+        h = jax.nn.gelu(h) * (x @ fsdp_gather(p["wg"], -1))
+    else:  # SwiGLU
+        h = jax.nn.silu(h) * (x @ fsdp_gather(p["wg"], -1))
+    return h @ fsdp_gather(p["wd"], 0)

@@ -1,0 +1,132 @@
+"""Mamba selective-SSM block (jamba's sub-quadratic mixer).
+
+Training/prefill uses a *chunked associative scan*: the linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` is composed within fixed-size chunks by
+``jax.lax.associative_scan`` and chained across chunks by ``jax.lax.scan``,
+so peak memory is O(B * chunk * d_inner * N) instead of O(B * S * ...) —
+the TPU-friendly analogue of Mamba's hardware-aware kernel.  Decode is the
+O(1)-per-token recurrent step on a (conv window, ssm state) cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.models.layers import dense_init
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba or MambaConfig()
+    d_in = m.expand * cfg.d_model
+    dt_rank = max(1, math.ceil(cfg.d_model / 16))
+    return m, d_in, dt_rank
+
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    m, d_in, dt_rank = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, d_in)) /
+                   math.sqrt(m.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * m.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_in, dtype),
+        "dt_bias": jnp.zeros((d_in,), dtype),
+        # S4D-real init: A = -[1..N] per channel
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (d_in, m.d_state))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_in, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C).  cache: (B, K-1, C)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_cache = xp[:, -(K - 1):] if K > 1 else pad
+    return out, new_cache
+
+
+def _ssm_params(p, cfg: ModelConfig, xc):
+    """xc: (B, L, d_in) -> (a, bx, Cs) of the recurrence, all fp32 (the
+    selective-scan is numerically sensitive; outputs cast back on exit)."""
+    m, d_in, dt_rank = _dims(cfg)
+    proj = xc @ p["x_proj"]  # (B, L, R + 2N)
+    dt, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + m.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32))
+    A = -jnp.exp(p["a_log"])  # (d_in, N) fp32
+    a = jnp.exp(dt[..., None] * A)  # (B, L, d_in, N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * \
+        Bs.astype(jnp.float32)[:, :, None, :]
+    return a, bx, Cs.astype(jnp.float32)
+
+
+def mamba_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D), chunked scan over the sequence."""
+    m, d_in, _ = _dims(cfg)
+    B, S, D = x.shape
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, _ = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+
+    chunk = min(m.chunk, S)
+    pad = (-S) % chunk
+    xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0))) if pad else xc
+    nc = xc_p.shape[1] // chunk
+    xcc = xc_p.reshape(B, nc, chunk, d_in).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, xch):
+        a, bx, Cs = _ssm_params(p, cfg, xch)
+
+        def combine(left, right):
+            al, bl = left
+            ar, br = right
+            return al * ar, ar * bl + br
+
+        a_acc, b_acc = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        hs = a_acc * h[:, None] + b_acc  # (B, chunk, d_in, N) fp32
+        y = (hs * Cs[:, :, None, :]).sum(-1)  # (B, chunk, d_in)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, d_in, cfg.mamba.d_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xcc)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * chunk, d_in)[:, :S]
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x.dtype)
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mamba_init_cache(cfg: ModelConfig, B: int, dtype):
+    m, d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((B, m.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((B, d_in, m.d_state), jnp.float32),  # scan state fp32
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x, cache):
+    """Single-token step.  x: (B, 1, D)."""
+    m, d_in, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_cache = _causal_conv(xin, p["conv_w"], p["conv_b"], cache["conv"])
+    xc = jax.nn.silu(xc)
+    a, bx, Cs = _ssm_params(p, cfg, xc)
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    y = (h * Cs[:, 0, None, :]).sum(-1)[:, None]  # (B, 1, d_in) fp32
+    y = (y + xc.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_cache, "h": h}

@@ -1,0 +1,235 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+exponential gating and stabilizer state), per arXiv:2405.04517.
+
+Both are genuinely recurrent (sLSTM's gates read h_{t-1}), so training runs
+a token-level ``jax.lax.scan``; decode is the same cell applied once.  All
+state is O(1) in sequence length — these blocks carry the ``long_500k``
+cell for xlstm-125m.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def _head_dims(cfg: ModelConfig):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    return nh, dh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: per-head matrix memory C (dh x dh), normalizer n, stabilizer m
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype):
+    nh, dh = _head_dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], D, D, dtype),
+        "wk": dense_init(ks[1], D, D, dtype),
+        "wv": dense_init(ks[2], D, D, dtype),
+        "wi": dense_init(ks[3], D, nh, dtype),  # input gate (per head)
+        "wf": dense_init(ks[4], D, nh, dtype),  # forget gate (per head)
+        "wo": dense_init(ks[5], D, D, dtype),   # output proj
+        "f_bias": jnp.full((nh,), 3.0, dtype),  # forget-dominant init
+    }
+
+
+def mlstm_cell(p, cfg: ModelConfig, x_t, state):
+    """One step.  x_t: (B, D); state: dict(C (B,nh,dh,dh), n (B,nh,dh), m (B,nh))."""
+    nh, dh = _head_dims(cfg)
+    B, D = x_t.shape
+    q = (x_t @ p["wq"]).reshape(B, nh, dh) / math.sqrt(dh)
+    k = (x_t @ p["wk"]).reshape(B, nh, dh) / math.sqrt(dh)
+    v = (x_t @ p["wv"]).reshape(B, nh, dh)
+    log_i = (x_t @ p["wi"]).astype(jnp.float32)  # (B, nh)
+    log_f = jax.nn.log_sigmoid((x_t @ p["wf"] + p["f_bias"]).astype(jnp.float32))
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_g = jnp.exp(log_i - m_new).astype(x_t.dtype)
+    f_g = jnp.exp(log_f + state["m"] - m_new).astype(x_t.dtype)
+    C = f_g[..., None, None] * state["C"] + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :])  # (B,nh,dh_v,dh_k)
+    n = f_g[..., None] * state["n"] + i_g[..., None] * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = (h_num / h_den[..., None]).reshape(B, D)
+    out = h @ p["wo"]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_init_state(cfg: ModelConfig, B: int, dtype):
+    nh, dh = _head_dims(cfg)
+    return {
+        "C": jnp.zeros((B, nh, dh, dh), dtype),
+        "n": jnp.zeros((B, nh, dh), dtype),
+        "m": jnp.zeros((B, nh), jnp.float32),
+    }
+
+
+def mlstm_apply_recurrent(p, cfg: ModelConfig, x):
+    """x: (B, S, D) — token-level scan (reference; O(S) sequential steps)."""
+    B, S, D = x.shape
+
+    def step(state, x_t):
+        out, new = mlstm_cell(p, cfg, x_t, state)
+        return new, out
+
+    _, ys = jax.lax.scan(step, mlstm_init_state(cfg, B, x.dtype),
+                         x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)
+
+
+def mlstm_apply_chunked(p, cfg: ModelConfig, x, chunk: int):
+    """Chunkwise-parallel mLSTM (EXPERIMENTS.md §Perf iteration 1).
+
+    Within a chunk of L tokens the recurrence unrolls to an attention-like
+    quadratic form (two MXU matmuls); across chunks only the (B,nh,dh,dh)
+    matrix state and (B,nh,dh) normalizer are carried.  Sequential depth
+    drops S -> S/L and the per-token state materialization disappears.
+    All gate math in fp32 with the standard max-stabilizer.
+
+    Equivalence with the token scan is asserted in tests (rtol 2e-4).
+    """
+    nh, dh = _head_dims(cfg)
+    B, S, D = x.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    nc = xp.shape[1] // L
+
+    q = (xp @ p["wq"]).reshape(B, nc, L, nh, dh) / math.sqrt(dh)
+    k = (xp @ p["wk"]).reshape(B, nc, L, nh, dh) / math.sqrt(dh)
+    v = (xp @ p["wv"]).reshape(B, nc, L, nh, dh)
+    log_i = (xp @ p["wi"]).astype(jnp.float32).reshape(B, nc, L, nh)
+    log_f = jax.nn.log_sigmoid(
+        (xp @ p["wf"] + p["f_bias"]).astype(jnp.float32)).reshape(B, nc, L, nh)
+
+    # move chunk axis to front for the scan: (nc, B, L, ...)
+    q, k, v = (t.transpose(1, 0, 2, 3, 4) for t in (q, k, v))
+    log_i = log_i.transpose(1, 0, 2, 3)
+    log_f = log_f.transpose(1, 0, 2, 3)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry  # (B,nh,dh,dh), (B,nh,dh), (B,nh) fp32
+        qc, kc, vc, li, lf = xs
+        F = jnp.cumsum(lf, axis=1)  # (B,L,nh) inclusive log-forget products
+        # candidate stabilizers:
+        #   inter: m + F_t   (carry seen through t forgets)
+        #   intra: max_s<=t (F_t - F_s + li_s)
+        g = F - li  # note: w_{t,s} = exp(F_t - (F_s - li_s)) for s<=t
+        # running max over s<=t of (li_s - F_s):
+        run_max = jax.lax.cummax(li - F, axis=1)
+        m_new = jnp.maximum(m[:, None] + F, F + run_max)  # (B,L,nh)
+        # inter-chunk term: exp(m + F_t - m_t) * (q_t . C)
+        inter_scale = jnp.exp(m[:, None] + F - m_new)  # (B,L,nh)
+        qC = jnp.einsum("blhk,bhvk->blhv", qc.astype(jnp.float32), C)
+        nq = jnp.einsum("blhk,bhk->blh", qc.astype(jnp.float32), n)
+        # intra-chunk attention-like weights (s<=t):
+        # w[t,s] = exp(F_t - F_s + li_s - m_t)
+        logw = (F[:, :, None] - F[:, None, :] + li[:, None, :]
+                - m_new[:, :, None])  # (B,L_t,L_s,nh)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(logw), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32))
+        wa = w * scores
+        intra = jnp.einsum("btsh,bshv->bthv", wa, vc.astype(jnp.float32))
+        n_intra = wa.sum(axis=2)  # (B,L,nh)
+        h_num = intra + inter_scale[..., None] * qC
+        n_tot = n_intra + inter_scale * nq
+        h = h_num / jnp.maximum(jnp.abs(n_tot), 1.0)[..., None]
+        # end-of-chunk state update (stabilized at m_L = m_new[:, -1])
+        m_last = m_new[:, -1]  # (B,nh)
+        F_L = F[:, -1]  # (B,nh)
+        # decay for carry: exp(m + F_L - m_last)
+        c_decay = jnp.exp(m + F_L - m_last)
+        # per-token contribution: exp(F_L - F_s + li_s - m_last)
+        s_scale = jnp.exp(F_L[:, None] - F + li - m_new[:, -1:][:, :1] * 0
+                          - m_last[:, None])  # (B,L,nh)
+        C_new = c_decay[..., None, None] * C + jnp.einsum(
+            "blhv,blhk->bhvk", vc.astype(jnp.float32) * s_scale[..., None],
+            kc.astype(jnp.float32))
+        n_new = c_decay[..., None] * n + (kc.astype(jnp.float32)
+                                          * s_scale[..., None]).sum(axis=1)
+        return (C_new, n_new, m_last), h
+
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (q, k, v, log_i, log_f))
+    # hs: (nc, B, L, nh, dh) -> (B, S, D)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, nc * L, nh * dh)[:, :S]
+    return h.astype(x.dtype) @ p["wo"]
+
+
+def mlstm_apply(p, cfg: ModelConfig, x):
+    chunk = getattr(cfg, "mlstm_chunk", 0)
+    if chunk:
+        return mlstm_apply_chunked(p, cfg, x, chunk)
+    return mlstm_apply_recurrent(p, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory per unit, recurrent gates, stabilizer
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype):
+    # NOTE: unique "s*" input-weight names — the sharding rules keep every
+    # sLSTM weight replicated (the recurrence is sequential; TP would force
+    # a collective per token, §Perf xlstm iteration 3).
+    D = cfg.d_model
+    ks = jax.random.split(key, 9)
+    p = {}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"s{g}"] = dense_init(ks[2 * i], D, D, dtype)
+        p[f"r{g}"] = dense_init(ks[2 * i + 1] if 2 * i + 1 < 9 else ks[8],
+                                D, D, dtype, scale=1.0 / math.sqrt(D) / 4)
+    p["f_bias"] = jnp.full((D,), 3.0, dtype)
+    return p
+
+
+def slstm_cell(p, cfg: ModelConfig, x_t, state):
+    """state: dict(c, n, h (B,D), m (B,D) fp32)."""
+    h_prev = state["h"]
+    z = jnp.tanh(x_t @ p["sz"] + h_prev @ p["rz"])
+    o = jax.nn.sigmoid(x_t @ p["so"] + h_prev @ p["ro"])
+    log_i = (x_t @ p["si"] + h_prev @ p["ri"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (x_t @ p["sf"] + h_prev @ p["rf"] + p["f_bias"]).astype(jnp.float32))
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    i_g = jnp.exp(log_i - m_new).astype(x_t.dtype)
+    f_g = jnp.exp(log_f + state["m"] - m_new).astype(x_t.dtype)
+    c = f_g * state["c"] + i_g * z
+    n = f_g * state["n"] + i_g
+    h = o * c / jnp.maximum(n, 1.0)
+    return h, {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_init_state(cfg: ModelConfig, B: int, dtype):
+    D = cfg.d_model
+    return {
+        "c": jnp.zeros((B, D), dtype), "n": jnp.zeros((B, D), dtype),
+        "h": jnp.zeros((B, D), dtype), "m": jnp.zeros((B, D), jnp.float32),
+    }
+
+
+def slstm_apply(p, cfg: ModelConfig, x):
+    B, S, D = x.shape
+
+    def step(state, x_t):
+        h, new = slstm_cell(p, cfg, x_t, state)
+        return new, h
+
+    _, ys = jax.lax.scan(step, slstm_init_state(cfg, B, x.dtype),
+                         x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,209 @@
+"""Path-rule-based sharding: parameter-tree paths → PartitionSpecs.
+
+T5X/MaxText-style logical rules: each rule is (path glob, spec for the
+*trailing* dims).  Specs are right-aligned to the array rank, so stacked
+scan parameters (leading ``repeats`` axis) pick up a leading ``None``
+automatically.
+
+Mesh contract (launch/mesh.py):
+  * ``data``  — DP + FSDP: batch AND the d_model dim of every weight;
+  * ``model`` — TP/EP: heads, mlp hidden, vocab, experts;
+  * ``pod``   — cross-pod DP (params replicated across pods; the gradient
+    all-reduce crosses the pod axis once per step).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+_FSDP = "data"
+_TP = "model"
+
+# (path glob, trailing-dims spec). First match wins.  MoE expert weights are
+# resolved separately (pattern-aware) before these rules apply.
+RULES = [
+    # embeddings / unembedding
+    ("*embed/table", (_TP, _FSDP)),        # (V, D): vocab x embed
+    ("*lm_head/head", (_FSDP, _TP)),       # (D, V)
+    # attention (incl. cross) and mlstm q/k/v/o
+    ("*wq", (_FSDP, _TP)), ("*wk", (_FSDP, _TP)), ("*wv", (_FSDP, _TP)),
+    ("*wo", (_TP, _FSDP)),
+    ("*q_scale", (None,)), ("*k_scale", (None,)),
+    # mlstm per-head gates (tiny trailing dim: keep unsharded)
+    ("*mixer/wi", (_FSDP, None)), ("*mixer/wf", (_FSDP, None)),
+    # dense mlp
+    ("*ffn/wi", (_FSDP, _TP)), ("*ffn/wg", (_FSDP, _TP)),
+    ("*ffn/wd", (_TP, _FSDP)),
+    ("*ffn/router", (_FSDP, None)),
+    # mamba
+    ("*in_proj", (_FSDP, _TP)), ("*out_proj", (_TP, _FSDP)),
+    ("*x_proj", (_TP, None)), ("*dt_proj", (None, _TP)),
+    ("*dt_bias", (_TP,)), ("*conv_w", (None, _TP)), ("*conv_b", (_TP,)),
+    ("*a_log", (_TP, None)), ("*d_skip", (_TP,)),
+    # slstm input/recurrent weights: TP over model.  (Full replication was
+    # tried and REFUTED in §Perf xlstm iteration 3: it removes the forward
+    # per-step h reassembly but adds per-step gradient-consistency
+    # all-reduces in the backward scan — 5x worse overall.)
+    ("*mixer/s?", (_FSDP, _TP)), ("*mixer/r?", (_FSDP, _TP)),
+    ("*f_bias", (None,)),
+    # norms and leftovers: replicated
+    ("*", (None,)),
+]
+
+# expert-weight specs by shard_axis choice, for trailing (E, d_in, d_out)
+_MOE_RULES = {
+    "experts": {"wi": (_TP, _FSDP, None), "wg": (_TP, _FSDP, None),
+                "wd": (_TP, None, _FSDP)},
+    "mlp": {"wi": (None, _FSDP, _TP), "wg": (None, _FSDP, _TP),
+            "wd": (None, _TP, _FSDP)},
+}
+
+
+def _right_align(spec: tuple, ndim: int) -> P:
+    spec = tuple(spec)
+    if len(spec) > ndim:
+        spec = spec[-ndim:] if ndim else ()
+    return P(*((None,) * (ndim - len(spec)) + spec))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _is_moe_leaf(path: str, cfg: Optional[ModelConfig]) -> bool:
+    if cfg is None or cfg.moe is None or "/ffn/" not in path:
+        return False
+    if path.startswith("encoder"):
+        return False
+    m = re.search(r"(?:^|/)b(\d+)/ffn/", path)
+    if not m:
+        return False
+    return cfg.pattern[int(m.group(1))][1] == "moe"
+
+
+def _spec_for(path: str, ndim: int, cfg: Optional[ModelConfig]) -> P:
+    leaf = path.rsplit("/", 1)[-1]
+    if _is_moe_leaf(path, cfg) and leaf in ("wi", "wg", "wd"):
+        return _right_align(_MOE_RULES[cfg.moe.shard_axis][leaf], ndim)
+    for pat, spec in RULES:
+        if fnmatch.fnmatch(path, pat):
+            return _right_align(spec, ndim)
+    return P(*((None,) * ndim))
+
+
+def _fit_spec(spec: P, shape, mesh: Optional[Mesh]) -> P:
+    """Drop axes that don't divide their dim (explicit pjit shardings
+    reject padding; e.g. whisper's vocab 51865 on a 16-way axis)."""
+    if mesh is None:
+        return spec
+    out = []
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(ax if shape[dim] % n == 0 else None)
+    return P(*out)
+
+
+def _apply_policy(spec: P, cfg: Optional[ModelConfig]) -> P:
+    """Per-arch sharding policy: cfg.fsdp=False drops the `data` weight
+    axes (pure DP+TP — right for small models where per-layer weight
+    collectives dominate)."""
+    if cfg is None or cfg.fsdp:
+        return spec
+    def drop(ax):
+        if ax == _FSDP:
+            return None
+        if isinstance(ax, tuple):
+            kept = tuple(a for a in ax if a != _FSDP)
+            return kept if kept else None
+        return ax
+    return P(*(drop(a) for a in spec))
+
+
+def param_specs(params, cfg: Optional[ModelConfig] = None,
+                mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _fit_spec(
+            _apply_policy(_spec_for(_path_str(path), x.ndim, cfg), cfg),
+            x.shape, mesh), params)
+
+
+def param_shardings(params, mesh: Mesh, cfg: Optional[ModelConfig] = None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, cfg, mesh))
+
+
+# --- activation / batch specs -------------------------------------------
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the global batch (pod extends data when present)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def data_specs(mesh: Mesh, batch):
+    """Shard every leading batch dim over (pod, data); arrays whose batch
+    doesn't divide the DP size (e.g. B=1 long-context decode) replicate."""
+    axes = batch_axes(mesh)
+    n_dp = dp_size(mesh)
+
+    def spec(x):
+        if x.ndim == 0 or x.shape[0] % n_dp != 0:
+            return P()
+        return P(axes, *((None,) * (x.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(mesh: Mesh, cache, batch_size: int, kv_seq_shard: bool):
+    """KV-cache sharding for serving.  Batch-sharded when possible; with
+    ``kv_seq_shard`` the KV sequence dim shards over ``data`` instead
+    (split-KV sequence parallelism for small-batch long-context decode)."""
+    axes = batch_axes(mesh)
+    n_dp = dp_size(mesh)
+
+    def spec(path, x):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        if name in ("k", "v", "ck", "cv") and x.ndim >= 5:
+            # stacked (repeats, B, S, KV, hd): batch over DP axes and the KV
+            # sequence over `model` (otherwise TP sits idle at decode and
+            # the cache blows per-device HBM); tiny batches shard the
+            # sequence over everything instead.
+            if batch_size % n_dp == 0:
+                return P(None, axes, "model", None, None)
+            return P(None, None, tuple(axes) + ("model",), None, None)
+        # recurrent states: (repeats, B, ...)
+        if x.ndim >= 3 and batch_size % n_dp == 0:
+            return P(None, axes, *((None,) * (x.ndim - 2)))
+        return P(*((None,) * x.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,66 @@
+"""Unit tests for the loop-aware HLO parser (roofline inputs)."""
+
+import textwrap
+
+from repro.launch import hlo_stats as H
+
+SAMPLE = textwrap.dedent("""
+    HloModule jit_step
+
+    %body.1 (param: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+      %p = (s32[], f32[64,128]) parameter(0)
+      %ar = f32[64,128]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%sum
+      %d = f32[64,64]{1,0} dot(%ar, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[64,128]) tuple(%i, %ar)
+    }
+
+    %cond.1 (param.1: (s32[], f32[64,128])) -> pred[] {
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i2, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[64,128], w: f32[128,64]) -> f32[64,128] {
+      %x = f32[64,128]{1,0} parameter(0)
+      %w = f32[128,64]{1,0} parameter(1)
+      %ag = f32[64,1024]{1,0} all-gather(%x), channel_id=2, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={1}
+      %wh = (s32[], f32[64,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+      ROOT %out = f32[64,128]{1,0} get-tuple-element(%wh), index=1
+    }
+""")
+
+
+def test_collectives_loop_multiplied():
+    ops = H.parse_collectives(SAMPLE)
+    kinds = {o.kind: o for o in ops}
+    ar = kinds["all-reduce"]
+    assert ar.multiplier == 12
+    assert ar.group_size == 16
+    assert ar.result_bytes == 64 * 128 * 4
+    # ring all-reduce: 2 * P * (D-1)/D * trips
+    assert ar.wire_bytes == 2 * 64 * 128 * 4 * 15 / 16 * 12
+    ag = kinds["all-gather"]
+    assert ag.multiplier == 1
+    assert ag.group_size == 8
+    assert ag.result_bytes == 64 * 1024 * 4
+
+
+def test_flops_loop_multiplied():
+    res = H.analyze(SAMPLE)
+    # dot: 2*M*N*K = 2*64*64*128, x12 trips
+    assert res["flops"] == 2 * 64 * 64 * 128 * 12
+
+
+def test_tuple_results_with_index_comments():
+    txt = SAMPLE.replace(
+        "(s32[], f32[64,128]) while",
+        "(s32[], f32[64,128], /*index=5*/f32[8,8]) while")
+    ops = H.parse_collectives(txt)
+    assert any(o.multiplier == 12 for o in ops)
+
+
+def test_summarize():
+    s = H.summarize(H.parse_collectives(SAMPLE))
+    assert s["count"] == 2  # one op entry each (multiplier folded in bytes)
+    assert set(s["by_kind"]) == {"all-reduce", "all-gather"}
+    assert s["total_wire_bytes"] == (
+        2 * 64 * 128 * 4 * 15 / 16 * 12 + 64 * 1024 * 4 * 7 / 8)

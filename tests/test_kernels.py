@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True executes the kernel
+bodies on CPU).  Shape/dtype sweeps + hypothesis properties per kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [64, 777, 4096, 5000])
+@pytest.mark.parametrize("n_bins", [8, 128, 1024])
+def test_histogram_sweep(rng, n, n_bins):
+    keys = jnp.asarray(rng.integers(0, n_bins, n), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.histogram(keys, n_bins)),
+        np.asarray(ref.histogram_ref(keys, n_bins)))
+
+
+@pytest.mark.parametrize("block", [64, 256, 1024])
+def test_histogram_block_invariance(rng, block):
+    keys = jnp.asarray(rng.integers(0, 64, 3000), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.histogram(keys, 64, block=block)),
+        np.asarray(ref.histogram_ref(keys, 64)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=1, max_size=600))
+def test_histogram_property(keys):
+    arr = jnp.asarray(np.asarray(keys, np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.histogram(arr, 64)),
+        np.bincount(keys, minlength=64))
+
+
+@pytest.mark.parametrize("n,n_bins", [(512, 8), (1000, 64), (4096, 256)])
+def test_rank_sweep(rng, n, n_bins):
+    keys = jnp.asarray(rng.integers(0, n_bins, n), jnp.int32)
+    counts = ref.histogram_ref(keys, n_bins)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(counts)[:-1]])
+    np.testing.assert_array_equal(
+        np.asarray(ops.rank(keys, start, n_bins)),
+        np.asarray(ref.rank_ref(keys, start, n_bins)))
+
+
+@pytest.mark.parametrize("n,n_bins,t", [(1000, 128, 0), (2048, 64, 4),
+                                        (513, 16, 2)])
+def test_reconstruct_sweep(rng, n, n_bins, t):
+    keys = jnp.asarray(rng.integers(0, n_bins << t, n), jnp.int32)
+    s = jnp.sort(keys)
+    counts = ref.histogram_ref((s >> t).astype(jnp.int32), n_bins)
+    trailing = (s & ((1 << t) - 1)).astype(jnp.int32)
+    out = ops.reconstruct(counts, trailing, n_bins, t)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(s))
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.reconstruct_ref(counts, trailing, t)))
+
+
+@pytest.mark.parametrize("T,E", [(512, 8), (4096, 128), (1000, 16), (64, 2)])
+def test_moe_dispatch_sweep(rng, T, E):
+    ids = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+    got = ops.moe_dispatch(ids, E)
+    want = ref.moe_dispatch_ref(ids, E)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 1500), st.sampled_from([2, 8, 64]))
+def test_moe_dispatch_property(T, E):
+    rng = np.random.default_rng(T * 31 + E)
+    ids = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+    perm, rank, counts = ops.moe_dispatch(ids, E)
+    # perm groups tokens by expert, counts match, rank inverts perm
+    grouped = np.asarray(ids)[np.asarray(perm)]
+    assert np.all(np.diff(grouped) >= 0)
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.bincount(np.asarray(ids), minlength=E))
+    np.testing.assert_array_equal(np.asarray(perm)[np.asarray(rank)],
+                                  np.arange(T))
+
+
+@pytest.mark.parametrize("n,p", [(4096, 12), (3000, 16), (1024, 8)])
+def test_kernel_sort_end_to_end(rng, n, p):
+    keys = jnp.asarray(rng.integers(0, 1 << p, n), jnp.int32)
+    out = ops.fractal_sort_kernel(keys, p)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.sort(np.asarray(keys)))
+
+
+
+@pytest.mark.parametrize("shape", [
+    (2, 64, 4, 16, 64), (1, 48, 2, 8, 80), (2, 100, 2, 32, 100),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kernel_sweep(rng, shape, causal):
+    B, S, H, hd, Skv = shape
+    key = jax.random.PRNGKey(B * 131 + S)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, Skv, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, Skv, H, hd))
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=16, block_kv=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 2, 16), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 2, 16), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, 32, 2, 16), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    assert got.dtype == dtype
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_pallas_attention_in_model():
+    """cfg.use_pallas_attention routes the model through the kernel."""
+    import dataclasses
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import transformer as T
+
+    cfg = smoke_config(get_config("llama3.2-1b"))
+    key = jax.random.PRNGKey(11)
+    params = T.init_params(key, cfg)
+    tokens = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    ref_logits, _ = T.forward(params, cfg, tokens)
+    cfg_k = dataclasses.replace(cfg, use_pallas_attention=True,
+                                attn_chunk_q=16, attn_chunk_kv=16)
+    got_logits, _ = T.forward(params, cfg_k, tokens)
+    np.testing.assert_allclose(np.asarray(got_logits),
+                               np.asarray(ref_logits), rtol=2e-4, atol=2e-4)

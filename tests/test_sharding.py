@@ -1,0 +1,110 @@
+"""Sharding rules: every arch's param tree gets valid, intentional specs."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as SH
+from repro.configs import get_config, list_configs
+from repro.models import transformer as T
+
+ARCHS = list_configs()
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg,
+                              dtype=jnp.bfloat16))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    params = _abstract_params(cfg)
+    specs = SH.param_specs(params, cfg)
+    p_leaves = jax.tree.leaves(params)
+    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(p_leaves) == len(s_leaves)
+    for pl, sl in zip(p_leaves, s_leaves):
+        assert isinstance(sl, P)
+        assert len(sl) <= pl.ndim
+
+
+class _MeshStub:
+    """Only .shape is consulted by _fit_spec — avoids needing 256 devices."""
+
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_sharded_dims_divisible_on_production_mesh(arch):
+    """Every dim sharded over data(16)/model(16) must divide exactly —
+    the mesh-aware fitter must drop non-dividing axes (whisper vocab)."""
+    cfg = get_config(arch)
+    params = _abstract_params(cfg)
+    specs = SH.param_specs(params, cfg, mesh=_MeshStub())
+    sizes = {"data": 16, "model": 16}
+
+    def check(path, leaf, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            assert leaf.shape[dim] % n == 0, (
+                f"{arch}: dim {dim} of shape {leaf.shape} not divisible "
+                f"by {n} ({spec})")
+
+    jax.tree_util.tree_map_with_path(
+        lambda path, l, s: check(path, l, s), params, specs,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def test_moe_shard_axis_choices():
+    qwen = get_config("qwen3-moe-30b-a3b")
+    grok = get_config("grok-1-314b")
+    pq = _abstract_params(qwen)
+    pg = _abstract_params(grok)
+    sq = SH.param_specs(pq, qwen)
+    sg = SH.param_specs(pg, grok)
+    # qwen3: experts over model; grok: expert-internal F over model
+    assert sq["blocks"]["b0"]["ffn"]["wi"] == P(None, "model", "data", None)
+    assert sg["blocks"]["b0"]["ffn"]["wi"] == P(None, None, "data", "model")
+
+
+def test_embed_and_head_specs():
+    cfg = get_config("qwen3-8b")
+    params = _abstract_params(cfg)
+    specs = SH.param_specs(params, cfg)
+    assert specs["embed"]["table"] == P("model", "data")
+    assert specs["lm_head"]["head"] == P("data", "model")
+
+
+def test_fsdp_sharding_halves_per_device_bytes():
+    """Param bytes per device on the 16x16 mesh ~= total/256 (2D sharding)."""
+    cfg = get_config("qwen3-8b")
+    params = _abstract_params(cfg)
+    specs = SH.param_specs(params, cfg)
+    sizes = {"data": 16, "model": 16}
+    total = 0
+    sharded = 0
+
+    def acc(leaf, spec):
+        nonlocal total, sharded
+        n = leaf.size * leaf.dtype.itemsize
+        total += n
+        div = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                div *= sizes[a]
+        sharded += n // div
+
+    jax.tree.map(acc, params, specs,
+                 is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))
+    # > 97% of bytes fully 2D-sharded (only norms/scales replicate)
+    assert sharded <= total / 200
