@@ -21,6 +21,7 @@ from repro.core import (
     bitonic_sort_stats,
     comparison_sort_stats,
     fractal_sort_stats,
+    make_sort_plan,
     radix_sort_stats,
 )
 
@@ -50,13 +51,23 @@ def run():
             f"b_eff={cm:.3f} fractal_gain={fri / cm:.2f}x")
         row(f"bandwidth/bitonic/{gb}GB", 0.0,
             f"b_eff={bt:.3f} fractal_gain={fri / bt:.2f}x")
-    # p=32 (the paper's Table II precision): two compressed passes
+    # p=32 (the paper's Table II precision): LSD 16-bit pass (full-key
+    # scatter now counted) + compressed MSD pass
     n = int(4 * 2**30 // 4)
     fr32 = b_eff(fractal_sort_stats(n, 32))
     rx32 = b_eff(radix_sort_stats(n, 32))
     row("bandwidth/fractal/4GB/p32", 0.0, f"b_eff={fr32:.3f}")
     row("bandwidth/radix/4GB/p32", 0.0,
         f"b_eff={rx32:.3f} fractal_gain={fr32 / rx32:.2f}x")
+    # per-plan traffic: the §III.G digit-width trade, pass by pass
+    for w in (8, 11, 16):
+        plan = make_sort_plan(n, 32, max_bins_log2=w)
+        st = fractal_sort_stats(n, 32, plan=plan)
+        per_pass = " ".join(
+            f"[{ps.kind}{ps.bits}b r={ps.bytes_read // n}B "
+            f"w={ps.bytes_written // n}B]" for ps in st.pass_stats)
+        row(f"bandwidth/fractal_plan_w{w}/4GB/p32", 0.0,
+            f"b_eff={b_eff(st):.3f} passes={st.passes} {per_pass}")
 
 
 if __name__ == "__main__":

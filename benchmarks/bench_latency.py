@@ -17,14 +17,18 @@ from repro.kernels import ops
 
 
 def run(sizes=(1 << 10, 1 << 12, 1 << 14, 1 << 16), p: int = 16):
+    from repro.core import make_sort_plan
+
     rng = np.random.default_rng(0)
     results = {}
     for n in sizes:
         keys = jnp.asarray(rng.integers(0, 1 << p, n), jnp.int32)
+        plan = make_sort_plan(n, p)
         t_f = time_fn(functools.partial(fractal_sort, p=p), keys)
         t_r = time_fn(functools.partial(lsd_radix_sort, p=p), keys)
         t_x = time_fn(xla_sort, keys)
-        row(f"latency/fractal/n{n}/p{p}", t_f, f"keys_per_s={n / t_f:.3g}")
+        row(f"latency/fractal/n{n}/p{p}", t_f,
+            f"plan={plan.describe()} keys_per_s={n / t_f:.3g}")
         row(f"latency/radix/n{n}/p{p}", t_r, f"keys_per_s={n / t_r:.3g}")
         row(f"latency/xla_sort/n{n}/p{p}", t_x, f"keys_per_s={n / t_x:.3g}")
         results[n] = (t_f, t_r, t_x)

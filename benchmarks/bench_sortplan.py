@@ -1,0 +1,54 @@
+"""SortPlan digit-width sweep: pick the default per-pass bin cap.
+
+For each digit width w the plan runs ceil(p / w)-ish passes of 2**w bins;
+rank work is O(n * 2**w * passes) while key traffic is O(n * passes) — the
+§III.G trade made tunable.  This sweep times :func:`fractal_sort` across
+``max_bins_log2`` and sizes, and prints the analytic per-plan traffic next
+to the measured wall-clock so the default (DEFAULT_MAX_BINS_LOG2) can be
+re-picked per host.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.core import (
+    DEFAULT_MAX_BINS_LOG2,
+    fractal_sort,
+    fractal_sort_stats,
+    make_sort_plan,
+)
+
+
+def run(sizes=(1 << 12, 1 << 15), p: int = 32,
+        widths=(4, 5, 6, 8, 11)):
+    rng = np.random.default_rng(0)
+    best = {}
+    for n in sizes:
+        keys = jnp.asarray(
+            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+            jnp.uint32)
+        for w in widths:
+            plan = make_sort_plan(n, p, max_bins_log2=w)
+            st = fractal_sort_stats(n, p, plan=plan)
+            t = time_fn(functools.partial(fractal_sort, p=p,
+                                          max_bins_log2=w), keys)
+            row(f"sortplan/n{n}/p{p}/w{w}", t,
+                f"plan={plan.describe()} passes={st.passes} "
+                f"bytes_per_key={st.bytes_per_key:.1f} "
+                f"keys_per_s={n / t:.3g}")
+            if t < best.get(n, (np.inf, None))[0]:
+                best[n] = (t, w)
+    for n, (t, w) in best.items():
+        marker = "=default" if w == DEFAULT_MAX_BINS_LOG2 else \
+            f"(default w={DEFAULT_MAX_BINS_LOG2})"
+        row(f"sortplan/best/n{n}", t, f"w={w} {marker}")
+    return best
+
+
+if __name__ == "__main__":
+    run()

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row).
   bench_batches     Fig. 7                latency vs serial batch count
   bench_throughput  Fig. 9                unit throughput
   bench_bandwidth   Fig. 10               b_eff = T_actual / B_DRAM
+  bench_sortplan    (beyond paper)        SortPlan digit-width sweep
   bench_moe_dispatch  (beyond paper)      dispatch vs argsort
   roofline          assignment §Roofline  from dry-run artifacts
 """
@@ -16,14 +17,15 @@ import sys
 
 def main() -> None:
     from benchmarks import (bench_batches, bench_bandwidth, bench_latency,
-                            bench_memory, bench_moe_dispatch,
+                            bench_memory, bench_moe_dispatch, bench_sortplan,
                             bench_throughput, roofline)
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
     mods = {
         "latency": bench_latency, "memory": bench_memory,
         "batches": bench_batches, "throughput": bench_throughput,
-        "bandwidth": bench_bandwidth, "moe_dispatch": bench_moe_dispatch,
+        "bandwidth": bench_bandwidth, "sortplan": bench_sortplan,
+        "moe_dispatch": bench_moe_dispatch,
         "roofline": roofline,
     }
     print("name,us_per_call,derived")

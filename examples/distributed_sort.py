@@ -13,10 +13,10 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import make_mesh  # noqa: E402
 from repro.core import distributed_fractal_sort  # noqa: E402
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 
 for name, keys in {

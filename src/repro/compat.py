@@ -1,0 +1,47 @@
+"""JAX version-compat shims (pinned jax 0.4.x ↔ the >= 0.7 APIs).
+
+The codebase targets the modern mesh/shard_map surface
+(``jax.make_mesh(..., axis_types=...)``, ``jax.shard_map(...,
+check_vma=...)``); the pinned jax 0.4.37 predates ``jax.sharding.AxisType``,
+top-level ``jax.shard_map``, and the ``check_vma`` kwarg (then spelled
+``check_rep`` under ``jax.experimental.shard_map``).  Route every mesh and
+shard_map construction through here so both API generations work unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "shard_map"]
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with ``axis_types=Auto`` where supported.
+
+    jax < 0.5 has no ``AxisType``/``axis_types``; there every mesh axis is
+    implicitly auto, so omitting the argument is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs.setdefault("axis_types", (axis_type.Auto,) * len(axis_names))
+    else:
+        kwargs.pop("axis_types", None)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the legacy ``check_rep`` flag (same meaning:
+    disable the replication/varying-manual-axes check).
+    """
+    impl = getattr(jax, "shard_map", None)
+    if impl is not None:
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+    else:
+        from jax.experimental.shard_map import shard_map as impl
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **kwargs)

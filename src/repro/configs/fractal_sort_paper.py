@@ -15,6 +15,10 @@ class SortWorkload:
     log2n_range: tuple  # dataset sizes, paper Fig. 3/5/6/9
     batches: tuple      # serial batch counts, paper Fig. 7/8
     distribution: str = "uniform"  # paper §IV.A test bed
+    # SortPlan per-pass bin cap (log2).  None -> the library default
+    # (repro.core.DEFAULT_MAX_BINS_LOG2, tuned by bench_sortplan); the
+    # paper's native scheme is 16 (one 2**16-counter pass per field).
+    max_bins_log2: int | None = None
 
 
 # Table II / Figs 3,6,7,8: p=32 latency+memory study up to n=2^30
@@ -33,4 +37,14 @@ PAPER_P16 = SortWorkload(
     batches=(1, 14),
 )
 
-WORKLOADS = {w.name: w for w in (PAPER_P32, PAPER_P16)}
+# The paper's own pass scheme (LLC-resident 2**16-counter trie, one pass
+# per 16-bit field) — the analytic-bandwidth reference plan.
+PAPER_NATIVE_PLAN = SortWorkload(
+    name="paper-native-plan",
+    p=32,
+    log2n_range=(10, 30),
+    batches=(1,),
+    max_bins_log2=16,
+)
+
+WORKLOADS = {w.name: w for w in (PAPER_P32, PAPER_P16, PAPER_NATIVE_PLAN)}

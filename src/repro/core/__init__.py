@@ -14,7 +14,14 @@ from repro.core.fractal_tree import (
     tapered_dtype,
     trie_depth,
 )
+from repro.core.sort_plan import (
+    DEFAULT_MAX_BINS_LOG2,
+    DigitPass,
+    SortPlan,
+    make_sort_plan,
+)
 from repro.core.fractal_sort import (
+    PassStats,
     SortStats,
     fractal_argsort,
     fractal_rank,

@@ -42,7 +42,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.fractal_sort import fractal_rank
+from repro.core.sort_plan import make_sort_plan
 
 __all__ = ["distributed_fractal_sort", "make_distributed_sort"]
 
@@ -112,39 +114,47 @@ def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
 
 
 def _sort_body(keys, p: int, axis: str, capacity: int, batch: int,
-               taper_wire: bool):
+               taper_wire: bool, digit_spans: tuple):
+    """LSD over the plan's digit spans — every pass is exact placement on
+    its field, so the composition is a stable full-precision sort."""
     u = keys.astype(jnp.uint32)
-    out, overflow = _distributed_pass(u, 0, min(p, 16), axis, capacity,
-                                      batch, taper_wire)
-    if p > 16:
-        out, ov2 = _distributed_pass(out, 16, p - 16, axis, capacity,
-                                     batch, taper_wire)
-        overflow = overflow | ov2
+    out = u
+    overflow = None
+    for shift, bits in digit_spans:
+        out, ov = _distributed_pass(out, shift, bits, axis, capacity,
+                                    batch, taper_wire)
+        overflow = ov if overflow is None else (overflow | ov)
     return out.astype(keys.dtype), overflow
 
 
 def make_distributed_sort(mesh, axis: str, p: int,
                           capacity_factor: Optional[float] = None,
                           batch: int = 1024,
-                          taper_wire: bool = True):
+                          taper_wire: bool = True,
+                          max_bins_log2: Optional[int] = None):
     """Build a jit-able distributed sort over ``mesh[axis]``.
 
     Returns ``fn(keys_global) -> (sorted_global, overflow)``; keys sharded
     ``P(axis)`` on axis 0, values in ``[0, 2**p)``, ``p <= 32``, global
     length divisible by the axis size.  ``capacity_factor`` defaults to the
     axis size (worst-case-safe); pass e.g. 2.0 to shrink the all_to_all
-    buffers for known-low-duplication keys.
+    buffers for known-low-duplication keys.  ``max_bins_log2`` bounds the
+    per-pass bin count via the SortPlan digit decomposition (each extra
+    pass costs one more all_to_all; on real ICI fewer/wider passes win —
+    pass 16 for the paper's two-field scheme).
     """
     D = mesh.shape[axis]
     cf = capacity_factor if capacity_factor is not None else float(D)
 
     def fn(keys):
         n = keys.shape[0]
+        plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
+        spans = tuple((dp.shift, dp.bits) for dp in plan.passes)
         cap = min(int(cf * (n // D) / D) + 1, n // D)
         body = functools.partial(
             _sort_body, p=p, axis=axis, capacity=cap, batch=batch,
-            taper_wire=taper_wire)
-        return jax.shard_map(
+            taper_wire=taper_wire, digit_spans=spans)
+        return compat.shard_map(
             body, mesh=mesh,
             in_specs=P(axis),
             out_specs=(P(axis), P()),

@@ -19,9 +19,26 @@ Pipeline for ``n`` keys of ``p`` bits with trie depth ``l_n``:
    payload and the output is ``repeat(bin_value, counts)`` — the extreme
    bandwidth win.
 
-``p = 32`` runs as two stable 16-bit passes (low half then high half, LSD
-order), matching the paper's "reduced number of radix passes on compressed
-entries" (complexity O(n * ceil(p / n_L)), §III.G).
+**SortPlan pass decomposition (§III.G).**  A ``p``-bit sort executes a
+:class:`~repro.core.sort_plan.SortPlan`: stable LSD digit passes over the
+trailing bits followed by one MSD *fractal* pass over the ``depth``-bit
+prefix.  For digit width ``w`` the trade is
+
+    passes  = ceil((p - depth) / w) + 1
+    work    = O(n * 2**w * passes)        (one-hot rank tiles, bounded)
+    traffic = O(n * passes) key moves  +  n * ceil((p - depth)/8) entry
+              payload bytes + n output writes (prefix bits reconstructed
+              from bin position, never moved)
+
+Fewer, wider passes move fewer bytes (the paper's "reduced number of radix
+passes on compressed entries", one 2**16-counter pass per 16-bit field);
+narrower digits bound the one-hot rank tile at ``batch * 2**w`` and keep
+the arithmetic cost linear in ``n`` — the multi-digit scheme of Stehle &
+Jacobsen and Wassenberg & Sanders.  :func:`fractal_sort` defaults to
+``max_bins_log2 = 4`` for execution (measured fastest on this CPU host —
+see ``benchmarks/bench_sortplan.py``); :func:`fractal_sort_stats` defaults
+to the paper's 16-bit-field plan for the analytic bandwidth model, and
+accepts any plan to account per-pass traffic.
 
 :func:`fractal_sort_stats` returns an *analytic* DRAM-traffic model so
 benchmarks can report the paper's bandwidth efficiency
@@ -32,15 +49,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import fractal_tree as ft
+from repro.core.sort_plan import (
+    DEFAULT_MAX_BINS_LOG2,
+    DigitPass,
+    SortPlan,
+    make_sort_plan,
+)
 
 __all__ = [
+    "PassStats",
     "SortStats",
     "fractal_rank",
     "fractal_sort",
@@ -49,6 +72,21 @@ __all__ = [
     "fractal_sort_stats",
     "reconstruct",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PassStats:
+    """Analytic DRAM traffic of one plan pass (bytes)."""
+
+    shift: int
+    bits: int
+    kind: str
+    bytes_read: int
+    bytes_written: int
+
+    @property
+    def n_bins(self) -> int:
+        return 1 << self.bits
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +100,7 @@ class SortStats:
     bytes_read: int
     bytes_written: int
     histogram_bytes: int  # tapered trie footprint (on-chip resident)
+    pass_stats: tuple = ()  # tuple[PassStats], LSD -> MSD
 
     @property
     def bytes_total(self) -> int:
@@ -77,40 +116,54 @@ def _key_bytes(p: int) -> int:
 
 
 def fractal_sort_stats(n: int, p: int, l_n: Optional[int] = None,
-                       with_index: bool = False) -> SortStats:
-    """Analytic traffic of :func:`fractal_sort` (feeds the b_eff benchmark).
+                       with_index: bool = False,
+                       plan: Optional[SortPlan] = None) -> SortStats:
+    """Analytic traffic of a plan execution (feeds the b_eff benchmark).
 
-    Per 16-bit pass: one streaming read of the keys, one write of entry
-    payloads (trailing bits only, rounded to whole bytes; zero when the
-    trie covers the field), one write of the output reconstructed from bin
-    positions.  The tapered trie lives on-chip (VMEM/LLC) and is counted
-    once in ``histogram_bytes``, not in DRAM traffic — the paper's p=16
-    claim that the compressed histogram fits entirely in LLC (§IV.F.1).
+    Per LSD pass: one streaming read of the keys, one full-key scatter
+    write.  The final MSD pass reads the keys once, writes entry payloads
+    (trailing bits only, rounded to whole bytes; zero when the trie covers
+    the field), and writes the output reconstructed from bin positions.
+    The tapered trie lives on-chip (VMEM/LLC) and is counted once in
+    ``histogram_bytes``, not in DRAM traffic — the paper's p=16 claim that
+    the compressed histogram fits entirely in LLC (§IV.F.1).
+
+    ``plan`` defaults to the *paper* plan (16-bit fields, the trade the
+    analytic model targets); pass any :class:`SortPlan` to account the
+    execution plan actually run — per-pass traffic lands in
+    ``SortStats.pass_stats``.
     """
-    if l_n is None:
-        l_n = ft.trie_depth(n, min(p, 16))
-    passes = max(1, math.ceil(p / 16))
+    if plan is None:
+        plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=16)
     kb = _key_bytes(p)
-    trailing_bits = max(0, min(p, 16) - l_n)
-    trailing_bytes = (trailing_bits + 7) // 8 if trailing_bits else 0
-    bytes_read = passes * n * kb  # key stream, once per pass
-    bytes_written = passes * n * trailing_bytes + n * kb  # entries + output
     if with_index:
         # stable payload tracking (paper Alg. 5): the index array maps each
         # sorted slot to its arrival position; width tapers with the intra-
         # bin count (<= 2 bytes for the paper's regimes) — one write at
-        # rank time, one sequential read at reconstruction.
-        idx_bytes = 2 if (l_n >= ft.ceil_log2(n) - 16) else 4
-        bytes_written += passes * n * idx_bytes
-        bytes_read += passes * n * idx_bytes
+        # rank time, one sequential read at reconstruction, per pass.
+        idx_bytes = 2 if (plan.depth >= ft.ceil_log2(n) - 16) else 4
+    else:
+        idx_bytes = 0
+    per_pass = []
+    for dp in plan.passes:
+        rd = n * kb + n * idx_bytes
+        if dp.kind == "msd":
+            trailing_bytes = (dp.shift + 7) // 8 if dp.shift else 0
+            wr = n * trailing_bytes + n * kb + n * idx_bytes
+        else:
+            wr = n * kb + n * idx_bytes
+        per_pass.append(PassStats(shift=dp.shift, bits=dp.bits, kind=dp.kind,
+                                  bytes_read=rd, bytes_written=wr))
     h_bytes = sum(
         (1 << l) * jnp.dtype(ft.tapered_dtype(l, ft.ceil_log2(n))).itemsize
-        for l in range(l_n + 1)
+        for l in range(plan.depth + 1)
     )
     return SortStats(
-        n=n, p=p, l_n=l_n, passes=passes,
-        bytes_read=bytes_read, bytes_written=bytes_written,
+        n=n, p=p, l_n=plan.depth, passes=len(per_pass),
+        bytes_read=sum(ps.bytes_read for ps in per_pass),
+        bytes_written=sum(ps.bytes_written for ps in per_pass),
         histogram_bytes=int(h_bytes),
+        pass_stats=tuple(per_pass),
     )
 
 
@@ -145,8 +198,9 @@ def fractal_rank(
     # under shard_map (JAX >= 0.8 VMA tracking); no-op numerically.
     carry_in = carry_in + prefix[0] * 0
     # Bound the materialized one-hot tile (batch x n_bins) to ~8 MiB so wide
-    # leaf levels (2**16 bins) trade batch length for tile width — the same
-    # locality/parallelism trade the paper tunes in §III.C.
+    # leaf levels trade batch length for tile width — the same locality/
+    # parallelism trade the paper tunes in §III.C.  SortPlan keeps n_bins
+    # small enough that this cap rarely binds.
     batch = min(batch, max(8, (1 << 21) // max(n_bins, 1)), max(n, 1))
     pad = (-n) % batch
     # Padding uses bin id ``n_bins`` which matches no one-hot column, so
@@ -207,80 +261,92 @@ def reconstruct(counts: jnp.ndarray, trailing: jnp.ndarray, l_n: int, p: int,
 
 
 # ---------------------------------------------------------------------------
+# Plan execution
+# ---------------------------------------------------------------------------
+
+
+def _lsd_pass(u: jnp.ndarray, dp: DigitPass, batch: int) -> jnp.ndarray:
+    """One stable counting pass scattering the full keys by a digit."""
+    digit = ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
+    rank, _, _ = fractal_rank(digit, dp.n_bins, batch=batch)
+    return jnp.zeros_like(u).at[rank].set(u)
+
+
+def _execute_plan(keys: jnp.ndarray, plan: SortPlan, batch: int) -> jnp.ndarray:
+    """Run a :class:`SortPlan`: stable LSD digit passes, then the fractal
+    MSD pass whose prefix bits are reconstructed from bin positions."""
+    n = keys.shape[0]
+    u = keys.astype(jnp.uint32)
+    for dp in plan.passes[:-1]:
+        u = _lsd_pass(u, dp, batch)
+    last = plan.passes[-1]
+    pref = (u >> last.shift).astype(jnp.int32)
+    rank, counts, _ = fractal_rank(pref, last.n_bins, batch=batch)
+    if last.shift == 0:
+        # zero-payload entries: output from bin positions alone.
+        return reconstruct(counts, jnp.zeros((n,), jnp.uint32), last.bits, plan.p)
+    # compressed entries: the payload is the trailing bits only; the
+    # prefix is reconstructed from bin positions.
+    ent = jnp.zeros((n,), jnp.uint32).at[rank].set(
+        u & jnp.uint32((1 << last.shift) - 1))
+    return reconstruct(counts, ent, last.bits, plan.p)
+
+
+# ---------------------------------------------------------------------------
 # Public sorts
 # ---------------------------------------------------------------------------
 
 
-def _single_field_sort(keys: jnp.ndarray, p: int, depth: int, batch: int):
-    """Stable fractal counting sort of ``p<=16``-bit keys, trie depth
-    ``depth``.  When ``depth < p`` the trailing ``t = p-depth`` bits are
-    LSD-ordered first (a 2**t-bin pass), then the prefix pass groups bins;
-    entries carry only the trailing bits into reconstruction."""
-    n = keys.shape[0]
-    u = keys.astype(jnp.uint32)
-    t = p - depth
-    if t == 0:
-        rank, counts, _ = fractal_rank(u.astype(jnp.int32), 1 << depth, batch=batch)
-        # zero-payload entries: output from bin positions alone.
-        return reconstruct(counts, jnp.zeros((n,), jnp.uint32), depth, p)
-    trail = (u & ((1 << t) - 1)).astype(jnp.int32)
-    rank_t, _, _ = fractal_rank(trail, 1 << t, batch=batch)
-    by_trail = jnp.zeros_like(u).at[rank_t].set(u)
-    pref = (by_trail >> t).astype(jnp.int32)
-    rank_p, counts, _ = fractal_rank(pref, 1 << depth, batch=batch)
-    ent = jnp.zeros((n,), jnp.uint32).at[rank_p].set(by_trail & ((1 << t) - 1))
-    return reconstruct(counts, ent, depth, p)
-
-
-@functools.partial(jax.jit, static_argnames=("p", "l_n", "batch"))
+@functools.partial(jax.jit,
+                   static_argnames=("p", "l_n", "batch", "max_bins_log2"))
 def fractal_sort(keys: jnp.ndarray, p: int, l_n: Optional[int] = None,
-                 batch: int = 1024) -> jnp.ndarray:
-    """Sort integer keys in [0, 2**p) — one fractal pass for p<=16, two
-    stable 16-bit LSD passes for p<=32 ("compressed entries")."""
+                 batch: int = 1024,
+                 max_bins_log2: Optional[int] = None) -> jnp.ndarray:
+    """Sort integer keys in [0, 2**p) by executing a :class:`SortPlan`:
+    bounded-width stable LSD digit passes plus one fractal MSD pass
+    ("compressed entries").  ``max_bins_log2`` caps per-pass bins at
+    ``2**max_bins_log2`` (default ``2**4``; see bench_sortplan)."""
     n = keys.shape[0]
-    if l_n is None:
-        l_n = ft.trie_depth(n, min(p, 16))
-    if p <= 16:
-        return _single_field_sort(keys, p, min(l_n, p), batch)
-    # p in (16, 32]: LSD over two 16-bit halves.
-    u = keys.astype(jnp.uint32)
-    lo = (u & 0xFFFF).astype(jnp.int32)
-    rank1, _, _ = fractal_rank(lo, 1 << 16, batch=batch)
-    u1 = jnp.zeros_like(u).at[rank1].set(u)  # stable by low half
-    hi_bits = p - 16
-    hi = (u1 >> 16).astype(jnp.int32)
-    rank2, counts2, _ = fractal_rank(hi, 1 << hi_bits, batch=batch)
-    # compressed entries: pass-2 payload is the low half only; the high
-    # bits are reconstructed from bin positions.
-    ent = jnp.zeros_like(u).at[rank2].set(u1 & 0xFFFF)
-    return reconstruct(counts2, ent, hi_bits, p)
+    plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
+    return _execute_plan(keys, plan, batch)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "batch"))
-def fractal_argsort(keys: jnp.ndarray, p: int, batch: int = 1024) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("p", "batch", "max_bins_log2"))
+def fractal_argsort(keys: jnp.ndarray, p: int, batch: int = 1024,
+                    max_bins_log2: Optional[int] = None) -> jnp.ndarray:
     """Stable permutation ``perm`` with ``keys[perm]`` sorted (exact, full
-    ``p``-bit precision; p <= 16 single pass — the MoE dispatch form where
-    p = ceil(log2 E))."""
+    ``p``-bit precision — the MoE dispatch form where p = ceil(log2 E)).
+
+    Runs every plan pass as a payload-carrying LSD pass (the permutation is
+    the payload, so there is nothing to reconstruct from bin positions)."""
     n = keys.shape[0]
-    assert p <= 16, "argsort form is the small-key dispatch path"
-    rank, _, _ = fractal_rank(keys.astype(jnp.int32), 1 << p, batch=batch)
-    return jnp.zeros((n,), jnp.int32).at[rank].set(jnp.arange(n, dtype=jnp.int32))
+    assert p <= 32, "argsort covers p <= 32 via the digit plan"
+    plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
+    u = keys.astype(jnp.uint32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    for dp in plan.passes:
+        digit = ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
+        rank, _, _ = fractal_rank(digit, dp.n_bins, batch=batch)
+        u = jnp.zeros_like(u).at[rank].set(u)
+        idx = jnp.zeros_like(idx).at[rank].set(idx)
+    return idx
 
 
 def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
-                         l_n: Optional[int] = None, batch: int = 1024):
+                         l_n: Optional[int] = None, batch: int = 1024,
+                         max_bins_log2: Optional[int] = None):
     """Streaming variant (paper §III.C/D): the input arrives in
     ``num_batches`` equal slices; the trie histogram is *cached and merged*
     across slices, then ranks stream through the shared carry and a single
-    scatter + reconstruct finishes.
+    scatter groups keys by the plan's MSD prefix; the remaining trailing
+    bits are ordered by the plan's LSD passes + reconstruction.
 
     Returns ``(sorted_keys, per-slice histograms)`` so tests can check the
     merge telescopes: ``merge(h_1..h_B) == build(all keys)``.
     """
     n = keys.shape[0]
-    if l_n is None:
-        l_n = ft.trie_depth(n, min(p, 16))
-    depth = min(l_n, p)
+    plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
+    depth = plan.depth
     t = p - depth
     slices = jnp.array_split(keys, num_batches)
     hists = [ft.build_histogram(s, p, depth) for s in slices]
@@ -295,5 +361,5 @@ def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
                                       carry_in=carry, bin_start=bin_start)
         out = out.at[rank].set(s)
     if t > 0:
-        out = _single_field_sort(out, p, depth, batch)
+        out = _execute_plan(out, plan, batch).astype(keys.dtype)
     return out, hists

@@ -1,0 +1,134 @@
+"""SortPlan: digit decomposition of a ``p``-bit sort into bounded passes.
+
+The paper trades *number of radix passes* against *bytes moved per pass*
+(§III.G: complexity O(n * ceil(p / n_L)) with compressed entries).  The
+seed implementation hard-coded that trade as "one pass per 16-bit field",
+which is the right shape for the paper's LLC-resident 2**16-counter trie —
+but the rank stage here materializes a (batch x n_bins) one-hot tile, so a
+2**16-bin pass does O(n * 2**16) work and is catastrophically slow off-TPU.
+
+A :class:`SortPlan` makes the trade explicit.  For keys of ``p`` bits it
+emits a sequence of stable counting passes, LSD -> MSD:
+
+* every pass ranks on a *digit* of at most ``max_bins_log2`` bits, so the
+  one-hot tile is bounded at ``batch * 2**max_bins_log2`` entries;
+* the final (MSD) pass is the *fractal* pass: its digit is the trie prefix,
+  entries carry only the trailing ``p - depth`` bits, and the prefix bits
+  are reconstructed from bin positions (Algorithm 5) — the compressed-entry
+  bandwidth story is per-plan, not per-16-bit-field;
+* total work is O(n * ceil(p / w) * 2**w) for digit width ``w`` — the
+  multi-pass digit scheme of Stehle & Jacobsen's hybrid radix sort and
+  Wassenberg & Sanders' bandwidth-bounded radix, applied to the fractal
+  rank stage.
+
+Digit widths also never exceed the trie depth scale ``~log2(n)``, so tiny
+inputs (n=64, p=16) get a few 5-bit passes instead of one 1024-bin pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core import fractal_tree as ft
+
+__all__ = [
+    "DEFAULT_MAX_BINS_LOG2",
+    "DigitPass",
+    "SortPlan",
+    "make_sort_plan",
+]
+
+# Default per-pass bin-count cap (2**4 = 16 bins).  Swept by
+# benchmarks/bench_sortplan.py: on this CPU host the rank stage is pure
+# compute on the materialized one-hot tile, so total work
+# O(n * 2**w * ceil(p / w)) is minimized at the narrowest digit — w=4 beats
+# w=8 by ~4x and w=11 by ~16x at n=2**15, p=32 (measured), and wins at
+# p=16 too.  The trade reverses on hardware where the tile maps to a
+# matrix unit and passes cost bandwidth (the paper's CPU runs one
+# 2**16-counter pass per field): pass max_bins_log2=16 there, or re-run
+# the sweep.
+DEFAULT_MAX_BINS_LOG2 = 4
+
+# Floor on the digit width for very small inputs: below this, per-pass
+# overhead dominates any one-hot-tile savings.
+_MIN_DIGIT_BITS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitPass:
+    """One stable counting pass over key bits ``[shift, shift + bits)``."""
+
+    shift: int
+    bits: int
+    kind: str = "lsd"  # "lsd" = full-key scatter; "msd" = fractal/reconstruct
+
+    @property
+    def n_bins(self) -> int:
+        return 1 << self.bits
+
+
+@dataclasses.dataclass(frozen=True)
+class SortPlan:
+    """Pass sequence for a ``p``-bit sort of ``n`` keys, LSD -> MSD."""
+
+    n: int
+    p: int
+    passes: tuple  # tuple[DigitPass, ...], contiguous, covering bits [0, p)
+
+    @property
+    def depth(self) -> int:
+        """Trie depth of the final (MSD/fractal) pass."""
+        return self.passes[-1].bits
+
+    @property
+    def trailing_bits(self) -> int:
+        """Entry payload width of the final pass (bits below the prefix)."""
+        return self.passes[-1].shift
+
+    @property
+    def num_passes(self) -> int:
+        return len(self.passes)
+
+    def describe(self) -> str:
+        return "+".join(f"{dp.bits}b" for dp in self.passes)
+
+
+def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
+                   max_bins_log2: Optional[int] = None) -> SortPlan:
+    """Decompose a ``p``-bit sort of ``n`` keys into bounded digit passes.
+
+    An explicit ``l_n`` sets the trie depth of the final pass and *wins
+    over the bin cap* (the caller asked for that trie; when it is None the
+    depth defaults to the paper's L = min(p, ceil(log2 n)) and is capped).
+    ``max_bins_log2`` caps every other pass's bin count at
+    ``2**max_bins_log2`` (default :data:`DEFAULT_MAX_BINS_LOG2`).  The
+    trailing ``p - depth`` bits are split into balanced LSD digits no
+    wider than the cap and no wider than the trie-depth scale, so
+    ``n_bins`` never dwarfs ``n``.
+    """
+    assert 1 <= p <= 32, f"p={p} out of range (1..32)"
+    w_max = DEFAULT_MAX_BINS_LOG2 if max_bins_log2 is None else max_bins_log2
+    assert 1 <= w_max <= 16, f"max_bins_log2={w_max} out of range (1..16)"
+    if l_n is None:
+        depth = max(1, min(ft.trie_depth(n, min(p, 16)), p, w_max))
+    else:
+        assert 1 <= l_n <= 16, f"l_n={l_n} out of range (1..16)"
+        depth = min(l_n, p)
+    t = p - depth
+    passes = []
+    if t > 0:
+        # LSD digits over the trailing bits, balanced, capped by both the
+        # global bin budget and the data scale (no 2**10-bin pass for n=64).
+        w = max(1, min(w_max, max(_MIN_DIGIT_BITS, depth)))
+        num = math.ceil(t / w)
+        base, extra = divmod(t, num)
+        shift = 0
+        for i in range(num):
+            bits = base + (1 if i < extra else 0)
+            passes.append(DigitPass(shift=shift, bits=bits, kind="lsd"))
+            shift += bits
+        assert shift == t
+    passes.append(DigitPass(shift=t, bits=depth, kind="msd"))
+    return SortPlan(n=n, p=p, passes=tuple(passes))

@@ -81,3 +81,26 @@ def fractal_histogram(keys: jnp.ndarray, n_bins: int,
         out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
         interpret=interpret,
     )(keys.astype(jnp.int32))
+
+
+def digit_histograms(keys: jnp.ndarray, passes, block: int = DEFAULT_BLOCK,
+                     interpret: bool = True, taper_in_tile: bool = True):
+    """Multi-digit driver: one leaf histogram per :class:`DigitPass`.
+
+    ``keys`` is the raw (uint32-castable) key stream; each plan pass gets
+    the bincount of its ``bits``-wide digit at ``shift``.  Every per-digit
+    tile stays bounded at ``block * 2**bits`` — the SortPlan decomposition
+    applied at the kernel layer.  (On TPU the digits could share one key
+    read by fusing the extracts into a single grid sweep; the driver keeps
+    one kernel launch per digit, which is what interpret mode can check.)
+
+    Returns a tuple of ``(2**bits,)`` int32 count arrays, plan order.
+    """
+    u = keys.astype(jnp.uint32)
+    out = []
+    for dp in passes:
+        digit = ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
+        out.append(fractal_histogram(digit, dp.n_bins, block=block,
+                                     interpret=interpret,
+                                     taper_in_tile=taper_in_tile))
+    return tuple(out)

@@ -81,3 +81,31 @@ def pltpu_scratch(shape, dtype):
     from jax.experimental.pallas import tpu as pltpu
 
     return pltpu.VMEM(shape, dtype)
+
+
+def fractal_rank_digit(keys: jnp.ndarray, digit_pass,
+                       block: int = DEFAULT_BLOCK, interpret: bool = True,
+                       bin_start: jnp.ndarray = None):
+    """Multi-digit driver: stable ranks on one :class:`DigitPass` digit.
+
+    Extracts the ``bits``-wide digit at ``shift`` from the raw key stream,
+    builds its histogram with the histogram kernel, scans it to exclusive
+    bin starts (tiny: ``2**bits`` ints, host/VPU), and runs the rank
+    kernel — the one-hot tile inside is bounded at ``block * 2**bits``.
+
+    Returns ``(rank, counts)``; ``bin_start`` may be supplied when the
+    global histogram is already known (distributed merge).
+    """
+    from repro.kernels.fractal_histogram import fractal_histogram
+
+    dp = digit_pass
+    digit = ((keys.astype(jnp.uint32) >> dp.shift)
+             & (dp.n_bins - 1)).astype(jnp.int32)
+    counts = fractal_histogram(digit, dp.n_bins, block=block,
+                               interpret=interpret)
+    if bin_start is None:
+        bin_start = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = fractal_rank_kernel(digit, bin_start, dp.n_bins, block=block,
+                               interpret=interpret)
+    return rank, counts

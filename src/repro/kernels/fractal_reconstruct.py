@@ -63,3 +63,18 @@ def fractal_reconstruct(counts: jnp.ndarray, trailing: jnp.ndarray,
         interpret=interpret,
     )(cdf, trailing.astype(jnp.int32))
     return out[:n]
+
+
+def fractal_reconstruct_plan(counts: jnp.ndarray, trailing: jnp.ndarray,
+                             plan, block: int = DEFAULT_BLOCK,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Multi-digit driver: Algorithm 5 for a :class:`SortPlan`'s MSD pass.
+
+    The plan's final pass defines both the bin space (``2**depth``) and the
+    entry payload width (``trailing_bits = p - depth``); the int32 kernel
+    arithmetic wraps for p=32 keys with the top bit set, which is bit-exact
+    once viewed as uint32 (callers cast to the key dtype).
+    """
+    last = plan.passes[-1]
+    return fractal_reconstruct(counts, trailing, last.n_bins, last.shift,
+                               block=block, interpret=interpret)

@@ -14,9 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fractal_histogram import digit_histograms as _digit_hists
 from repro.kernels.fractal_histogram import fractal_histogram as _hist
+from repro.kernels.fractal_rank import fractal_rank_digit as _rank_digit
 from repro.kernels.fractal_rank import fractal_rank_kernel as _rank
 from repro.kernels.fractal_reconstruct import fractal_reconstruct as _recon
+from repro.kernels.fractal_reconstruct import (
+    fractal_reconstruct_plan as _recon_plan,
+)
 from repro.kernels.flash_attention import flash_attention_kernel as _flash
 from repro.kernels.moe_dispatch import moe_dispatch as _dispatch
 
@@ -24,7 +29,9 @@ __all__ = [
     "default_interpret",
     "flash_attention",
     "histogram",
+    "digit_histograms",
     "rank",
+    "rank_digit",
     "reconstruct",
     "moe_dispatch",
     "fractal_sort_kernel",
@@ -48,6 +55,18 @@ def histogram(keys, n_bins: int, block: int = 1024, interpret=None):
     return _hist(keys, n_bins, block=block, interpret=interpret)
 
 
+def digit_histograms(keys, passes, block: int = 1024, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _digit_hists(keys, passes, block=block, interpret=interpret)
+
+
+def rank_digit(keys, digit_pass, block: int = 1024, interpret=None,
+               bin_start=None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _rank_digit(keys, digit_pass, block=block, interpret=interpret,
+                       bin_start=bin_start)
+
+
 def rank(keys, bin_start, n_bins: int, block: int = 1024, interpret=None):
     interpret = default_interpret() if interpret is None else interpret
     return _rank(keys, bin_start, n_bins, block=block, interpret=interpret)
@@ -67,37 +86,34 @@ def moe_dispatch(expert_ids, num_experts: int, block: int = 1024,
                      interpret=interpret)
 
 
-def fractal_sort_kernel(keys, p: int, block: int = 1024, interpret=None):
-    """End-to-end kernel-path sort for keys in [0, 2**p), p <= 16 one pass.
+def fractal_sort_kernel(keys, p: int, block: int = 1024, interpret=None,
+                        max_bins_log2=None):
+    """End-to-end kernel-path sort for keys in [0, 2**p), p <= 32.
 
-    histogram → exclusive scan → rank → scatter trailing → reconstruct;
-    the composition the paper calls FractalSortCPU(A).
+    Executes a :class:`~repro.core.sort_plan.SortPlan` through the kernels:
+    per LSD pass, histogram → exclusive scan → rank → full-key scatter;
+    the final MSD pass scatters only the trailing-bit entries and rebuilds
+    prefix bits from bin positions (reconstruct) — the composition the
+    paper calls FractalSortCPU(A), with the pass decomposition bounding
+    every kernel's one-hot tile.
     """
     interpret = default_interpret() if interpret is None else interpret
     n = keys.shape[0]
-    import math
 
-    from repro.core import fractal_tree as ft
+    from repro.core.sort_plan import make_sort_plan
 
-    l_n = ft.trie_depth(n, min(p, 16))
-    depth = min(l_n, p)
-    t = p - depth
+    plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
     u = keys.astype(jnp.uint32)
-    if t > 0:
-        # LSD: order trailing bits first (small 2**t-bin pass).
-        trail = (u & ((1 << t) - 1)).astype(jnp.int32)
-        counts_t = histogram(trail, 1 << t, block=block, interpret=interpret)
-        start_t = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts_t)[:-1]])
-        rank_t = rank(trail, start_t, 1 << t, block=block, interpret=interpret)
-        u = jnp.zeros_like(u).at[rank_t].set(u)
-    pref = (u >> t).astype(jnp.int32)
-    counts = histogram(pref, 1 << depth, block=block, interpret=interpret)
-    start = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
-    rk = rank(pref, start, 1 << depth, block=block, interpret=interpret)
-    trailing = jnp.zeros((n,), jnp.int32).at[rk].set(
-        (u & ((1 << t) - 1)).astype(jnp.int32)) if t > 0 else jnp.zeros((n,), jnp.int32)
-    out = reconstruct(counts, trailing, 1 << depth, t, block=block,
+    for dp in plan.passes[:-1]:
+        rk, _ = rank_digit(u, dp, block=block, interpret=interpret)
+        u = jnp.zeros_like(u).at[rk].set(u)
+    last = plan.passes[-1]
+    rk, counts = rank_digit(u, last, block=block, interpret=interpret)
+    if last.shift > 0:
+        trailing = jnp.zeros((n,), jnp.int32).at[rk].set(
+            (u & ((1 << last.shift) - 1)).astype(jnp.int32))
+    else:
+        trailing = jnp.zeros((n,), jnp.int32)
+    out = _recon_plan(counts, trailing, plan, block=block,
                       interpret=interpret)
     return out.astype(keys.dtype)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def gpipe_apply(stage_fn: Callable, mesh, axis: str, stage_params, x_micro):
     """Run ``stage_fn(params_s, x) -> y`` as an S-stage pipeline.
@@ -66,6 +68,6 @@ def gpipe_apply(stage_fn: Callable, mesh, axis: str, stage_params, x_micro):
         return jax.lax.psum(outs, axis)
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=P(), check_vma=False)(stage_params,
-                                                         x_micro)
+    return compat.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=P(), check_vma=False)(stage_params,
+                                                            x_micro)

@@ -1,11 +1,14 @@
 """Multi-device tests — each runs in a subprocess with 8 forced host
 devices so the main test process keeps seeing exactly 1 device."""
 
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(body: str):
@@ -14,16 +17,19 @@ def _run(body: str):
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh8 = jax.make_mesh((8,), ("data",),
-                              axis_types=(jax.sharding.AxisType.Auto,))
-        mesh24 = jax.make_mesh((2, 4), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh, shard_map
+        mesh8 = make_mesh((8,), ("data",))
+        mesh24 = make_mesh((2, 4), ("data", "model"))
     """) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
                        text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
-                       cwd="/root/repo")
+                       # JAX_PLATFORMS=cpu: the image ships libtpu; without
+                       # the pin jax probes for a TPU and hangs the child.
+                       env={"PYTHONPATH": "src",
+                            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                            "HOME": os.environ.get("HOME", "/root"),
+                            "JAX_PLATFORMS": "cpu"},
+                       cwd=REPO_ROOT)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     return r.stdout
 
@@ -65,8 +71,8 @@ def test_compressed_psum_error_feedback():
         def body(x, err):
             return compressed_psum(x, "data", err)
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh8, in_specs=(P("data"), P("data")),
-                                  out_specs=(P("data"), P("data")), check_vma=False))
+        f = jax.jit(shard_map(body, mesh=mesh8, in_specs=(P("data"), P("data")),
+                              out_specs=(P("data"), P("data")), check_vma=False))
         err = jnp.zeros_like(gs)
         mean, err = f(gs, err)
         want = g.mean(axis=0, keepdims=True).repeat(8, 0)
@@ -161,10 +167,10 @@ def test_split_kv_decode_matches_dense():
         import functools
         body = functools.partial(L.attn_decode, p, cfg, update_cache=False,
                                  kv_seq_axis="data")
-        f = jax.shard_map(lambda x_, k_, v_, pos_: body(x_, k_, v_, pos_)[0],
-                          mesh=mesh8,
-                          in_specs=(P(), P(None, "data"), P(None, "data"), P()),
-                          out_specs=P(), check_vma=False)
+        f = shard_map(lambda x_, k_, v_, pos_: body(x_, k_, v_, pos_)[0],
+                      mesh=mesh8,
+                      in_specs=(P(), P(None, "data"), P(None, "data"), P()),
+                      out_specs=P(), check_vma=False)
         got = f(x, ck, cv, pos)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5)
@@ -228,8 +234,7 @@ def test_elastic_restore_across_meshes():
         params24 = jax.tree.map(jax.device_put, params, p_sh24)
         d = tempfile.mkdtemp()
         CK.save(d, 5, params24)
-        mesh81 = jax.make_mesh((8, 1), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh81 = make_mesh((8, 1), ("data", "model"))
         p_sh81 = SH.param_shardings(params, mesh81, cfg)
         back = CK.restore(d, 5, params, shardings=p_sh81)
         for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):

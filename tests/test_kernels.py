@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -90,6 +94,26 @@ def test_kernel_sort_end_to_end(rng, n, p):
     out = ops.fractal_sort_kernel(keys, p)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.sort(np.asarray(keys)))
+
+
+def test_kernel_sort_p32(rng):
+    keys = rng.integers(0, 1 << 32, 1500, dtype=np.uint64).astype(np.uint32)
+    out = ops.fractal_sort_kernel(jnp.asarray(keys, jnp.uint32), 32)
+    np.testing.assert_array_equal(np.asarray(out), np.sort(keys))
+
+
+def test_digit_histograms_match_bincount(rng):
+    from repro.core import make_sort_plan
+
+    n, p = 3000, 24
+    keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32)
+    plan = make_sort_plan(n, p)
+    hists = ops.digit_histograms(jnp.asarray(keys, jnp.uint32), plan.passes)
+    assert len(hists) == plan.num_passes
+    for dp, h in zip(plan.passes, hists):
+        digit = (keys >> dp.shift) & (dp.n_bins - 1)
+        np.testing.assert_array_equal(
+            np.asarray(h), np.bincount(digit, minlength=dp.n_bins))
 
 
 

@@ -1,8 +1,11 @@
 """GPipe pipeline substrate == sequential execution (subprocess, 4 devs)."""
 
+import os
 import subprocess
 import sys
 import textwrap
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def test_gpipe_matches_sequential():
@@ -10,10 +13,10 @@ def test_gpipe_matches_sequential():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import numpy as np, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.pipeline import gpipe_apply
 
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((4,), ("stage",))
         key = jax.random.PRNGKey(0)
         S, M, mb, D = 4, 6, 2, 16
         # one linear+gelu layer per stage
@@ -33,8 +36,12 @@ def test_gpipe_matches_sequential():
         print("GPIPE_OK")
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=300, cwd="/root/repo",
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                       text=True, timeout=300, cwd=REPO_ROOT,
+                       # JAX_PLATFORMS=cpu: the image ships libtpu; without
+                       # the pin jax probes for a TPU and hangs the child.
+                       env={"PYTHONPATH": "src",
+                            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                            "HOME": os.environ.get("HOME", "/root"),
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "GPIPE_OK" in r.stdout

@@ -94,8 +94,8 @@ def test_checkpoint_elastic_reshard(tmp_path):
     """Restore with explicit shardings (elastic restart onto a new mesh)."""
     t = _tree()
     CK.save(str(tmp_path), 3, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)

@@ -2,17 +2,25 @@
 and resumes from checkpoint; the serving driver completes its queue."""
 
 import json
+import os
 import subprocess
 import sys
 
 import pytest
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def _run(args, timeout=600):
     r = subprocess.run(
         [sys.executable, "-m"] + args, capture_output=True, text=True,
-        timeout=timeout, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"})
+        timeout=timeout, cwd=REPO_ROOT,
+        # JAX_PLATFORMS=cpu: the image ships libtpu; without the pin jax
+        # probes for a TPU and hangs the child process.
+        env={"PYTHONPATH": "src",
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     return r.stdout
 
