@@ -6,18 +6,33 @@ rank work is O(n * 2**w * passes) while key traffic is O(n * passes) — the
 ``max_bins_log2`` and sizes, and prints the analytic per-plan traffic next
 to the measured wall-clock so the default (DEFAULT_MAX_BINS_LOG2) can be
 re-picked per host.
+
+Extra modes (``python -m benchmarks.bench_sortplan <mode>``):
+
+* ``rank`` — serial-vs-parallel rank engine comparison: the same plan
+  executed with the chunk-parallel two-phase :func:`fractal_rank` vs the
+  serial-scan :func:`fractal_rank_serial`, at the rank level and end to
+  end.
+* ``smoke`` — the CI guard: one n=2**14 point under a hard wall-clock
+  bound, so pass-loop regressions (the PR-1 15.5 s variety) fail fast.
 """
 
 from __future__ import annotations
 
 import functools
+import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, time_fn
 from repro.core import (
     DEFAULT_MAX_BINS_LOG2,
+    JnpBackend,
+    PlanExecutor,
+    fractal_rank,
+    fractal_rank_serial,
     fractal_sort,
     fractal_sort_stats,
     make_sort_plan,
@@ -50,5 +65,70 @@ def run(sizes=(1 << 12, 1 << 15), p: int = 32,
     return best
 
 
+def run_rank_compare(sizes=(1 << 12, 1 << 15), p: int = 32,
+                     bins_log2=(4, 8)):
+    """Serial-scan vs chunk-parallel rank engine, same inputs/plans.
+
+    Reports both the isolated rank stage (one digit stream) and the full
+    plan execution (the n=2**15, p=32 acceptance point of the executor
+    refactor).  Returns {n: parallel_sort_speedup}.
+    """
+    rng = np.random.default_rng(0)
+    speedups = {}
+    for n in sizes:
+        for w in bins_log2:
+            d = jnp.asarray(rng.integers(0, 1 << w, n).astype(np.int32))
+            tp = time_fn(jax.jit(functools.partial(
+                fractal_rank, n_bins=1 << w)), d)
+            ts = time_fn(jax.jit(functools.partial(
+                fractal_rank_serial, n_bins=1 << w)), d)
+            row(f"rankmode/parallel/n{n}/bins{1 << w}", tp,
+                f"keys_per_s={n / tp:.3g}")
+            row(f"rankmode/serial/n{n}/bins{1 << w}", ts,
+                f"speedup={ts / tp:.2f}x")
+        keys = jnp.asarray(
+            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+            jnp.uint32)
+        plan = make_sort_plan(n, p)
+        par = jax.jit(lambda k: PlanExecutor(JnpBackend()).run(k, plan))
+        ser = jax.jit(lambda k: PlanExecutor(
+            JnpBackend(rank_fn=fractal_rank_serial)).run(k, plan))
+        tp, ts = time_fn(par, keys), time_fn(ser, keys)
+        row(f"rankmode/sort_parallel/n{n}/p{p}", tp,
+            f"plan={plan.describe()}")
+        row(f"rankmode/sort_serial/n{n}/p{p}", ts,
+            f"parallel_speedup={ts / tp:.2f}x")
+        speedups[n] = ts / tp
+    return speedups
+
+
+# Hard wall for the CI smoke point (n=2**14, p=32, default plan).  The
+# healthy time on a 2-core runner is ~10 ms; the PR-1 regression this
+# guards against was 15.5 s — three orders of magnitude of headroom
+# without flaking on slow shared runners.
+SMOKE_BUDGET_S = 2.0
+
+
+def smoke(n: int = 1 << 14, p: int = 32) -> float:
+    """One benchmark point under a hard budget (CI pass-loop guard)."""
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(
+        rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+        jnp.uint32)
+    t = time_fn(functools.partial(fractal_sort, p=p), keys)
+    row(f"sortplan/smoke/n{n}/p{p}", t, f"budget_s={SMOKE_BUDGET_S}")
+    if t > SMOKE_BUDGET_S:
+        raise SystemExit(
+            f"sortplan smoke point took {t:.2f}s > {SMOKE_BUDGET_S}s "
+            f"budget: a pass-loop/rank regression landed")
+    return t
+
+
 if __name__ == "__main__":
-    run()
+    mode = sys.argv[1] if len(sys.argv) > 1 else None
+    if mode == "rank":
+        run_rank_compare()
+    elif mode == "smoke":
+        smoke()
+    else:
+        run()

@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row) and
+always finishes by writing ``BENCH_sort.json`` — a machine-readable record
+of the core sort's perf (n, p, plan, wall seconds, analytic b_eff) so the
+trajectory is tracked across PRs.
 
   bench_latency     Fig. 3/5 + Table II   sort latency vs baselines
   bench_memory      Fig. 6/8              footprint vs n / batch count
@@ -10,9 +13,57 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.row).
   bench_sortplan    (beyond paper)        SortPlan digit-width sweep
   bench_moe_dispatch  (beyond paper)      dispatch vs argsort
   roofline          assignment §Roofline  from dry-run artifacts
+
+``python benchmarks/run.py sort_json`` writes only the JSON record.
 """
 
+import functools
+import json
 import sys
+
+# The points every PR's BENCH_sort.json records (n, p); small enough to
+# run in seconds, big enough that a pass-loop regression is visible.
+SORT_JSON_POINTS = ((1 << 12, 16), (1 << 15, 32))
+
+
+def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
+    """Time :func:`fractal_sort` at the standard points and write the
+    machine-readable perf record (wall time + the analytic traffic model
+    behind the paper's b_eff figure)."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks.bench_bandwidth import b_eff
+    from benchmarks.common import time_fn
+    from repro.core import fractal_sort, fractal_sort_stats, make_sort_plan
+
+    rng = np.random.default_rng(0)
+    results = []
+    for n, p in SORT_JSON_POINTS:
+        keys = jnp.asarray(
+            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+            jnp.uint32 if p == 32 else jnp.int32)
+        wall_s = time_fn(functools.partial(fractal_sort, p=p), keys)
+        plan = make_sort_plan(n, p)
+        st = fractal_sort_stats(n, p, plan=plan)
+        results.append({
+            "n": n,
+            "p": p,
+            "plan": plan.describe(),
+            "passes": st.passes,
+            "wall_s": wall_s,
+            "keys_per_s": n / wall_s,
+            "analytic_bytes_per_key": st.bytes_per_key,
+            "analytic_b_eff": b_eff(st),
+        })
+    record = {"schema": 1, "points": results}
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}: " + "; ".join(
+        f"n={r['n']} p={r['p']} {r['wall_s'] * 1e3:.1f}ms "
+        f"b_eff={r['analytic_b_eff']:.3f}" for r in results))
+    return record
 
 
 def main() -> None:
@@ -21,6 +72,9 @@ def main() -> None:
                             bench_throughput, roofline)
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only == "sort_json":
+        emit_sort_json()
+        return
     mods = {
         "latency": bench_latency, "memory": bench_memory,
         "batches": bench_batches, "throughput": bench_throughput,
@@ -33,6 +87,7 @@ def main() -> None:
         if only and only != name:
             continue
         mod.run()
+    emit_sort_json()
 
 
 if __name__ == '__main__':

@@ -19,12 +19,21 @@ from repro.core.sort_plan import (
     DigitPass,
     SortPlan,
     make_sort_plan,
+    rank_chunk_len,
+)
+from repro.core.executor import (
+    DistributedBackend,
+    JnpBackend,
+    PallasBackend,
+    PassBackend,
+    PlanExecutor,
 )
 from repro.core.fractal_sort import (
     PassStats,
     SortStats,
     fractal_argsort,
     fractal_rank,
+    fractal_rank_serial,
     fractal_sort,
     fractal_sort_batched,
     fractal_sort_stats,

@@ -31,6 +31,10 @@ can all target one destination, so worst-case capacity is the full local
 shard (``capacity_factor = axis size``).  An overflow flag is returned so
 callers can rerun with a higher factor — same contract as the tapered
 counters' saturation flag (paper §IV.A skew caveat).
+
+Pass sequencing lives in :class:`~repro.core.executor.PlanExecutor`; this
+module provides the per-pass collective primitive (:func:`_distributed_pass`)
+that :class:`~repro.core.executor.DistributedBackend` wraps.
 """
 
 from __future__ import annotations
@@ -43,6 +47,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core.executor import DistributedBackend, PlanExecutor
 from repro.core.fractal_sort import fractal_rank
 from repro.core.sort_plan import make_sort_plan
 
@@ -113,17 +118,16 @@ def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
     return out, overflow
 
 
-def _sort_body(keys, p: int, axis: str, capacity: int, batch: int,
-               taper_wire: bool, digit_spans: tuple):
-    """LSD over the plan's digit spans — every pass is exact placement on
-    its field, so the composition is a stable full-precision sort."""
-    u = keys.astype(jnp.uint32)
-    out = u
-    overflow = None
-    for shift, bits in digit_spans:
-        out, ov = _distributed_pass(out, shift, bits, axis, capacity,
-                                    batch, taper_wire)
-        overflow = ov if overflow is None else (overflow | ov)
+def _sort_body(keys, plan, axis: str, capacity: int, batch: int,
+               taper_wire: bool):
+    """Executor over the DistributedBackend — every plan pass is exact
+    placement on its field (``reconstructs = False``), so the composition
+    is a stable full-precision sort.  Runs inside the shard_map region."""
+    backend = DistributedBackend(axis=axis, capacity=capacity, batch=batch,
+                                 taper_wire=taper_wire)
+    out = PlanExecutor(backend).run(keys, plan)
+    overflow = (backend.overflow if backend.overflow is not None
+                else jnp.zeros((), jnp.bool_))
     return out.astype(keys.dtype), overflow
 
 
@@ -149,11 +153,10 @@ def make_distributed_sort(mesh, axis: str, p: int,
     def fn(keys):
         n = keys.shape[0]
         plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
-        spans = tuple((dp.shift, dp.bits) for dp in plan.passes)
         cap = min(int(cf * (n // D) / D) + 1, n // D)
         body = functools.partial(
-            _sort_body, p=p, axis=axis, capacity=cap, batch=batch,
-            taper_wire=taper_wire, digit_spans=spans)
+            _sort_body, plan=plan, axis=axis, capacity=cap, batch=batch,
+            taper_wire=taper_wire)
         return compat.shard_map(
             body, mesh=mesh,
             in_specs=P(axis),

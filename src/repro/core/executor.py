@@ -1,0 +1,358 @@
+"""PlanExecutor: the one pass loop every FractalSort entry point runs.
+
+The paper's pipeline (histogram → rank → scatter → reconstruct, Algs. 1–5)
+used to be hand-rolled three times — the jnp path, the Pallas kernel
+driver, and the distributed sort — each walking the same
+:class:`~repro.core.sort_plan.SortPlan` with its own loop.  This module
+owns that loop once and delegates the per-pass *primitives* to a pluggable
+:class:`PassBackend`:
+
+* :class:`JnpBackend` — pure-jnp primitives built on the chunk-parallel
+  two-phase :func:`~repro.core.fractal_sort.fractal_rank`;
+* :class:`PallasBackend` — the TPU kernels (histogram / rank / reconstruct,
+  interpret-mode off-TPU) from ``repro.kernels``;
+* :class:`DistributedBackend` — one ``shard_map`` collective pass per plan
+  digit (local rank + psum histogram merge + all_to_all placement),
+  wrapping :func:`~repro.core.distributed._distributed_pass`.
+
+Executor responsibilities (backend-independent):
+
+* **digit extraction** — each pass ranks on key bits
+  ``[shift, shift + bits)``;
+* **pass sequencing** — stable LSD digit passes, then the fractal MSD pass;
+* **payload carry** — full keys through LSD passes, the argsort
+  permutation, or only the compressed trailing-bit entries into the MSD
+  scatter;
+* **final fractal reconstruct** — prefix bits rebuilt from bin positions
+  (Algorithm 5) for backends that support it; backends that place keys at
+  exact global slots every pass (distributed) set ``reconstructs = False``
+  and run the MSD digit as one more exact pass;
+* **empty-input guard** — ``n == 0`` returns immediately (no pass ranks an
+  empty stream).
+
+Two executor modes beyond the plain sort:
+
+* :meth:`PlanExecutor.run_argsort` carries the arrival index as the
+  payload through *every* pass (nothing to reconstruct — the permutation
+  is the output).
+* :meth:`PlanExecutor.run_grouped_trailing` is the **segment-aware** mode
+  used by the streaming/batched sort: the array is already grouped by the
+  MSD prefix (segments), and each trailing LSD pass re-ranks *within*
+  segments, so the final MSD pass is never re-run.  The within-segment
+  rank needs no composite-bin one-hot: a pass's ordinary global rank gives
+  each key its arrival among equal digits, and a cheap
+  ``(segments, n_bins)`` scatter-add table converts that to the
+  within-segment arrival (subtract equal-digit arrivals from earlier
+  segments) plus the smaller-digit offset.  Per pass this costs one
+  ordinary rank + one O(n) table build — the same order as a plain LSD
+  pass — versus the full plan re-run (all LSD passes *plus* a fresh MSD
+  histogram/rank/scatter) the batched path used to pay.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.fractal_tree import exclusive_cumsum
+from repro.core.sort_plan import DigitPass, SortPlan
+
+__all__ = [
+    "PassBackend",
+    "JnpBackend",
+    "PallasBackend",
+    "DistributedBackend",
+    "PlanExecutor",
+]
+
+
+def _digit_of(u: jnp.ndarray, dp: DigitPass) -> jnp.ndarray:
+    """The ``dp.bits``-wide digit of each (uint32) key at ``dp.shift``."""
+    return ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
+
+
+class PassBackend:
+    """Per-pass primitives a :class:`PlanExecutor` composes into a sort.
+
+    A backend provides stable digit *ranking* plus (optionally) its own
+    scatter and Algorithm-5 reconstruction.  Backends whose passes place
+    keys at exact global output slots themselves (the distributed
+    all_to_all pass) override :meth:`lsd_pass` wholesale and set
+    ``reconstructs = False``.
+    """
+
+    #: whether the MSD pass compresses entries + rebuilds prefix bits from
+    #: bin positions (Alg. 5); False runs it as one more exact full pass.
+    reconstructs: bool = True
+
+    #: base chunk length the per-pass ``rank_batch`` hints derive from;
+    #: backends with a user-facing batch/block knob override this so the
+    #: knob reaches the rank engine.
+    rank_base: int = 1024
+
+    def rank(self, digit: jnp.ndarray, n_bins: int, *,
+             batch_hint: Optional[int] = None,
+             carry_in: Optional[jnp.ndarray] = None,
+             bin_start: Optional[jnp.ndarray] = None):
+        """Stable output slot per key for one digit stream.
+
+        Returns ``(rank, counts, carry_out)`` — the streaming-carry
+        contract of :func:`~repro.core.fractal_sort.fractal_rank`.
+        """
+        raise NotImplementedError
+
+    def scatter(self, rank: jnp.ndarray, *arrays: jnp.ndarray):
+        """Place each array's elements at their ranks (payload carry)."""
+        return tuple(jnp.zeros_like(a).at[rank].set(a) for a in arrays)
+
+    def lsd_pass(self, u: jnp.ndarray, dp: DigitPass) -> jnp.ndarray:
+        """One stable counting pass scattering the full keys by a digit."""
+        rank, _, _ = self.rank(_digit_of(u, dp), dp.n_bins,
+                               batch_hint=dp.rank_batch(self.rank_base))
+        (u,) = self.scatter(rank, u)
+        return u
+
+    def reconstruct(self, counts: jnp.ndarray, trailing: jnp.ndarray,
+                    plan: SortPlan) -> jnp.ndarray:
+        """Algorithm 5: sorted keys from bin counts + permuted trailing
+        entries; prefix bits recovered from bin position."""
+        raise NotImplementedError
+
+
+class JnpBackend(PassBackend):
+    """Pure-jnp primitives (chunk-parallel two-phase rank, jnp scatter).
+
+    ``rank_fn`` swaps the rank engine — used by benchmarks to compare the
+    chunk-parallel rank against the serial-scan oracle on identical plans.
+    """
+
+    def __init__(self, batch: int = 1024, rank_fn=None):
+        self.batch = batch
+        self.rank_base = batch  # the user batch knob feeds the pass hints
+        self.rank_fn = rank_fn
+
+    def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
+             bin_start=None):
+        from repro.core.fractal_sort import fractal_rank
+
+        fn = self.rank_fn if self.rank_fn is not None else fractal_rank
+        batch = self.batch if batch_hint is None else batch_hint
+        return fn(digit, n_bins, batch=batch, carry_in=carry_in,
+                  bin_start=bin_start)
+
+    def reconstruct(self, counts, trailing, plan):
+        from repro.core.fractal_sort import reconstruct
+
+        last = plan.passes[-1]
+        return reconstruct(counts, trailing.astype(jnp.uint32),
+                           last.bits, plan.p)
+
+
+class PallasBackend(PassBackend):
+    """TPU-kernel primitives (interpret mode executes the kernel bodies
+    on CPU; on a real TPU backend the kernels compile)."""
+
+    def __init__(self, block: int = 1024, interpret: Optional[bool] = None):
+        if interpret is None:
+            from repro.kernels.ops import default_interpret
+
+            interpret = default_interpret()
+        self.block = block
+        self.interpret = interpret
+
+    def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
+             bin_start=None):
+        if carry_in is not None:
+            raise NotImplementedError(
+                "streaming carry is a JnpBackend mode; the rank kernel "
+                "holds its carry in VMEM scratch per call")
+        from repro.kernels.fractal_rank import fractal_rank_counts
+
+        return fractal_rank_counts(digit, n_bins, block=self.block,
+                                   interpret=self.interpret,
+                                   bin_start=bin_start)
+
+    def reconstruct(self, counts, trailing, plan):
+        from repro.kernels.fractal_reconstruct import fractal_reconstruct_plan
+
+        return fractal_reconstruct_plan(counts, trailing.astype(jnp.int32),
+                                        plan, block=self.block,
+                                        interpret=self.interpret)
+
+
+class DistributedBackend(PassBackend):
+    """One collective pass per plan digit, inside a ``shard_map`` body.
+
+    Every pass is *exact* global placement on its field (local rank +
+    psum histogram merge injecting the global ``bin_start`` and the
+    cross-device carry, then all_to_all routing), so there is nothing to
+    reconstruct — the MSD digit runs as one more exact pass
+    (``reconstructs = False``).  Bucket-overflow flags accumulate across
+    passes on the backend; read :attr:`overflow` after the run.
+    """
+
+    reconstructs = False
+
+    def __init__(self, axis: str, capacity: int, batch: int = 1024,
+                 taper_wire: bool = True):
+        self.axis = axis
+        self.capacity = capacity
+        self.batch = batch
+        self.taper_wire = taper_wire
+        self.overflow = None  # traced bool, set by the first pass
+
+    def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
+             bin_start=None):
+        raise NotImplementedError(
+            "the distributed pass fuses rank + placement; use lsd_pass")
+
+    def lsd_pass(self, u, dp):
+        from repro.core.distributed import _distributed_pass
+
+        out, ov = _distributed_pass(u, dp.shift, dp.bits, self.axis,
+                                    self.capacity, self.batch,
+                                    self.taper_wire)
+        self.overflow = ov if self.overflow is None else self.overflow | ov
+        return out
+
+
+class PlanExecutor:
+    """Runs a :class:`SortPlan` against one :class:`PassBackend`.
+
+    The *only* pass loop in the codebase: every public sort entry point
+    (`fractal_sort`, `fractal_argsort`, `fractal_sort_batched`,
+    `fractal_sort_kernel`, `make_distributed_sort`) builds a plan and
+    hands it here.
+    """
+
+    def __init__(self, backend: PassBackend):
+        self.backend = backend
+
+    # -- plain sort ---------------------------------------------------------
+
+    def run(self, keys: jnp.ndarray, plan: SortPlan) -> jnp.ndarray:
+        """Sorted keys.  Backends with ``reconstructs`` return the
+        Algorithm-5 output dtype (int32/uint32 by ``plan.p``); others
+        return the uint32 key stream — callers cast as needed."""
+        if keys.shape[0] == 0:
+            return keys
+        u = keys.astype(jnp.uint32)
+        for dp in plan.passes[:-1]:
+            u = self.backend.lsd_pass(u, dp)
+        last = plan.passes[-1]
+        if not self.backend.reconstructs:
+            return self.backend.lsd_pass(u, last)
+        rank, counts, _ = self.backend.rank(
+            _digit_of(u, last), last.n_bins,
+            batch_hint=last.rank_batch(self.backend.rank_base))
+        if last.shift:
+            # compressed entries: only the trailing bits travel; the
+            # prefix is rebuilt from bin positions.
+            (trailing,) = self.backend.scatter(
+                rank, u & jnp.uint32((1 << last.shift) - 1))
+        else:
+            # zero-payload regime: output from bin positions alone.
+            trailing = jnp.zeros_like(u)
+        return self.backend.reconstruct(counts, trailing, plan)
+
+    # -- argsort ------------------------------------------------------------
+
+    def run_argsort(self, keys: jnp.ndarray, plan: SortPlan) -> jnp.ndarray:
+        """Stable permutation with ``keys[perm]`` sorted: every pass is a
+        payload-carrying LSD pass (the permutation is the payload, so
+        there is nothing to reconstruct from bin positions)."""
+        n = keys.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        if n == 0:
+            return idx
+        u = keys.astype(jnp.uint32)
+        for dp in plan.passes:
+            rank, _, _ = self.backend.rank(
+                _digit_of(u, dp), dp.n_bins,
+                batch_hint=dp.rank_batch(self.backend.rank_base))
+            u, idx = self.backend.scatter(rank, u, idx)
+        return idx
+
+    # -- segment-aware grouped-trailing mode --------------------------------
+
+    def run_grouped_trailing(self, entries: jnp.ndarray, counts: jnp.ndarray,
+                             plan: SortPlan) -> jnp.ndarray:
+        """Finish a sort whose array is already grouped by the MSD prefix.
+
+        ``entries`` holds, per slot, the ``plan.trailing_bits`` trailing
+        bits of a key whose prefix is implied by its segment (the slot's
+        bin, from ``counts``); each trailing LSD pass re-ranks *within*
+        segments so grouping is invariant and the MSD pass never re-runs.
+        Returns the reconstructed sorted keys.
+        """
+        n = entries.shape[0]
+        last = plan.passes[-1]
+        if n == 0 or last.shift == 0:
+            return self.backend.reconstruct(counts, jnp.zeros_like(entries),
+                                            plan)
+        ends = jnp.cumsum(counts.astype(jnp.int32))
+        seg_start = ends - counts
+        # slot -> segment; ranks never cross segments, so this map is
+        # invariant across every trailing pass (computed once).
+        seg = jnp.searchsorted(ends, jnp.arange(n, dtype=jnp.int32),
+                               side="right").astype(jnp.int32)
+        u = entries.astype(jnp.uint32)
+        for dp in plan.passes[:-1]:
+            digit = _digit_of(u, dp)
+            # zero bin_start: the rank IS the arrival among equal digits,
+            # in array (= segment-major) order — no global-start round-trip
+            arr_g, _, _ = self.backend.rank(
+                digit, dp.n_bins,
+                batch_hint=dp.rank_batch(self.backend.rank_base),
+                bin_start=jnp.zeros((dp.n_bins,), jnp.int32))
+            # (segments, n_bins) digit table: one O(n) scatter-add
+            table = jnp.zeros((last.n_bins, dp.n_bins), jnp.int32).at[
+                seg, digit].add(1)
+            before_seg = jnp.cumsum(table, axis=0) - table  # earlier segments
+            lower = jnp.cumsum(table, axis=1) - table       # smaller digits
+            rank = (seg_start[seg] + lower[seg, digit]
+                    + arr_g - before_seg[seg, digit])
+            (u,) = self.backend.scatter(rank, u)
+        return self.backend.reconstruct(counts, u, plan)
+
+    # -- streaming (batched) mode -------------------------------------------
+
+    def run_streaming(self, keys: jnp.ndarray, plan: SortPlan,
+                      num_batches: int):
+        """Streaming sort (paper §III.C/D): the input arrives in
+        ``num_batches`` slices; the trie histogram is cached and merged
+        across slices, ranks stream through the shared carry, and one
+        scatter groups entries by the plan's MSD prefix.  The trailing
+        bits then sort segment-aware (:meth:`run_grouped_trailing`) when
+        the plan supports it, falling back to a full re-plan for very
+        wide plans.  Returns ``(sorted_keys, per-slice histograms)``.
+        """
+        from repro.core import fractal_tree as ft
+
+        n = keys.shape[0]
+        depth, t = plan.depth, plan.trailing_bits
+        slices = jnp.array_split(keys, num_batches)
+        hists = [ft.build_histogram(s, plan.p, depth) for s in slices]
+        merged = functools.reduce(ft.merge_histograms, hists)
+        counts = merged.leaf_counts
+        bin_start = exclusive_cumsum(counts)
+        carry = jnp.zeros((1 << depth,), jnp.int32)
+        grouped = t == 0 or plan.supports_grouped_trailing
+        mask = jnp.uint32((1 << t) - 1)
+        out = jnp.zeros((n,), jnp.uint32)
+        for s in slices:
+            su = s.astype(jnp.uint32)
+            prefix = (su >> t).astype(jnp.int32)
+            rank, _, carry = self.backend.rank(
+                prefix, 1 << depth, carry_in=carry, bin_start=bin_start)
+            # grouped mode scatters only the compressed trailing entries
+            # (the prefix is implied by the destination segment); the
+            # fallback must carry full keys for its plan re-run.
+            out = out.at[rank].set(su & mask if grouped else su)
+        if grouped:  # covers t == 0: reconstruct from counts alone
+            sorted_u = self.run_grouped_trailing(out, counts, plan)
+        else:
+            sorted_u = self.run(out, plan)
+        return sorted_u.astype(keys.dtype), hists

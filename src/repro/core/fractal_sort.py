@@ -6,11 +6,20 @@ Pipeline for ``n`` keys of ``p`` bits with trie depth ``l_n``:
    level; upper levels by pairwise reduction).  No input bucketing, no
    sampling: every key contributes independently (paper contributions 1/2).
 2. **Rank** — stable output position per key:
-   ``rank = bin_start[prefix] + carry[prefix] + intra_batch_arrival``.
-   Computed by *batch streaming* (paper §III.C/D): a scan over fixed-size
-   batches carrying the running per-bin histogram, with the intra-batch
-   arrival index from a one-hot cumulative sum — on TPU this is an MXU
-   matmul; here it is the faithful jnp expression of the same dataflow.
+   ``rank = bin_start[prefix] + carry[prefix] + intra_chunk_arrival``,
+   computed by a **two-phase chunk-parallel engine** (the independent-
+   counting / cross-chunk-scan / parallel-placement structure of Stehle &
+   Jacobsen's hybrid radix and Wassenberg & Sanders' bandwidth-bounded
+   radix).  Phase 1 builds every fixed-size chunk's digit histogram at
+   once (a vmapped bincount — no sequential dependence); phase 2 derives
+   every chunk's carry from *one* exclusive scan over the
+   ``(num_chunks, n_bins)`` histogram matrix and then ranks all chunks in
+   parallel (``vmap``), the intra-chunk arrival coming from a one-hot
+   cumulative sum — on TPU an MXU matmul, and on CPU free of the serial
+   chunk-to-chunk dependence the old ``lax.scan`` imposed.  The streaming
+   carry API (``carry_in``/``carry_out``/``bin_start``) is unchanged, so
+   batched and distributed consumers stream slices through one cached
+   histogram exactly as before (paper §III.C/D).
 3. **Reconstruct** (Algorithm 5 / FractalSortCPUA) — the sorted array is
    rebuilt from (bin counts, per-bin stable order, trailing bits).  The top
    ``l_n`` bits of every output key are *recovered from the bin position*,
@@ -43,6 +52,12 @@ accepts any plan to account per-pass traffic.
 :func:`fractal_sort_stats` returns an *analytic* DRAM-traffic model so
 benchmarks can report the paper's bandwidth efficiency
 ``b_eff = T_actual / B_DRAM`` (Eq. 1) exactly, independent of host hardware.
+
+**Execution.**  Every public sort here is a thin wrapper: it builds a
+:class:`SortPlan` and hands it to a
+:class:`~repro.core.executor.PlanExecutor` over the pure-jnp
+:class:`~repro.core.executor.JnpBackend` — the same pass loop the Pallas
+kernel driver and the distributed sort run through their own backends.
 """
 
 from __future__ import annotations
@@ -55,17 +70,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fractal_tree as ft
+from repro.core.executor import JnpBackend, PlanExecutor
 from repro.core.sort_plan import (
     DEFAULT_MAX_BINS_LOG2,
-    DigitPass,
     SortPlan,
     make_sort_plan,
+    rank_chunk_len,
 )
 
 __all__ = [
     "PassStats",
     "SortStats",
     "fractal_rank",
+    "fractal_rank_serial",
     "fractal_sort",
     "fractal_argsort",
     "fractal_sort_batched",
@@ -145,14 +162,15 @@ def fractal_sort_stats(n: int, p: int, l_n: Optional[int] = None,
     else:
         idx_bytes = 0
     per_pass = []
-    for dp in plan.passes:
+    for dpass in plan.passes:
         rd = n * kb + n * idx_bytes
-        if dp.kind == "msd":
-            trailing_bytes = (dp.shift + 7) // 8 if dp.shift else 0
+        if dpass.kind == "msd":
+            trailing_bytes = (dpass.shift + 7) // 8 if dpass.shift else 0
             wr = n * trailing_bytes + n * kb + n * idx_bytes
         else:
             wr = n * kb + n * idx_bytes
-        per_pass.append(PassStats(shift=dp.shift, bits=dp.bits, kind=dp.kind,
+        per_pass.append(PassStats(shift=dpass.shift, bits=dpass.bits,
+                                  kind=dpass.kind,
                                   bytes_read=rd, bytes_written=wr))
     h_bytes = sum(
         (1 << l) * jnp.dtype(ft.tapered_dtype(l, ft.ceil_log2(n))).itemsize
@@ -168,8 +186,49 @@ def fractal_sort_stats(n: int, p: int, l_n: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
-# Rank: batch-streamed stable ranks with cached histogram carry
+# Rank: two-phase chunk-parallel stable ranks with cached histogram carry
 # ---------------------------------------------------------------------------
+
+
+def _rank_chunks(prefix: jnp.ndarray, n: int, n_bins: int, batch: int):
+    """Pad to a whole number of fixed-size chunks and reshape.
+
+    Padding uses bin id ``n_bins``, which matches no one-hot column and is
+    out of bounds for the bincount scatter (dropped), so padded rows
+    contribute nothing to counts or carries.  The chunk length bounds the
+    materialized one-hot tile (chunk x n_bins) — the locality/parallelism
+    trade the paper tunes in §III.C; :func:`rank_chunk_len` is the shared
+    per-pass execution hint.
+    """
+    batch = min(rank_chunk_len(n_bins, batch), max(n, 1))
+    pad = (-n) % batch
+    if pad:
+        prefix = jnp.concatenate(
+            [prefix, jnp.full((pad,), n_bins, jnp.int32)])
+    return prefix.reshape(-1, batch)
+
+
+def _rank_finish(prefix, ranks, counts, carry_in, bin_start, n_bins):
+    """Shared tail: derive bin starts, add them, emit the carry triple."""
+    carry_out = carry_in + counts
+    if bin_start is None:
+        bin_start = ft.exclusive_cumsum(counts)
+    rank = bin_start[jnp.clip(prefix, 0, n_bins - 1)] + ranks
+    return rank, counts, carry_out
+
+
+def _rank_empty(n_bins, carry_in, bin_start):
+    counts = jnp.zeros((n_bins,), jnp.int32)
+    return jnp.zeros((0,), jnp.int32), counts, carry_in
+
+
+# Per-group cap on the materialized (chunks x chunk x n_bins) one-hot
+# footprint of the chunk-parallel rank, in int32 elements (2**19 = 2 MiB):
+# groups this size stay LLC-resident on the host while still exposing
+# many chunks of parallelism per step (measured fastest on this 2-core
+# host across n in 2^15..2^18, bins in 16..256 — see bench_sortplan's
+# rank-engine comparison mode).
+_RANK_GROUP_ELEMS = 1 << 19
 
 
 def fractal_rank(
@@ -182,11 +241,29 @@ def fractal_rank(
     """Stable output position for each key given its bin id ``prefix``.
 
     ``rank[i] = bin_start[prefix[i]] + carry[prefix[i]] + arrivals before i``
-    — the scatter-index computation of a counting/radix sort, evaluated as a
-    scan over fixed batches.  ``carry_in`` lets callers stream several key
-    batches through one cached histogram (paper §III.D); ``bin_start`` may
-    be supplied when the global histogram is already known (e.g. after the
-    psum merge in the distributed sort).
+    — the scatter-index computation of a counting/radix sort, evaluated by
+    the **two-phase chunk-parallel engine**:
+
+    * phase 1: every chunk's digit histogram (the last row of the chunk's
+      one-hot cumulative sum — computed once, no sequential dependence
+      between chunks);
+    * phase 2: every chunk's carry from one exclusive scan over the
+      ``(num_chunks, n_bins)`` histogram matrix, then all chunks ranked in
+      parallel (vmapped one-hot cumulative sum for the intra-chunk
+      arrival).
+
+    Chunks are processed in LLC-sized *groups* (``_RANK_GROUP_ELEMS``):
+    within a group everything is vmapped (parallel); only the tiny
+    ``(n_bins,)`` carry crosses group boundaries.  When the whole input
+    fits one group — every default-plan pass up to ``n = 2**19`` — there
+    is no sequential step at all.
+
+    ``carry_in`` lets callers stream several key batches through one
+    cached histogram (paper §III.D); ``bin_start`` may be supplied when
+    the global histogram is already known (e.g. after the psum merge in
+    the distributed sort).  :func:`fractal_rank_serial` is the equivalent
+    serial-scan engine, kept as the property-test oracle and benchmark
+    baseline.
 
     Returns ``(rank, counts, carry_out)``.
     """
@@ -194,39 +271,84 @@ def fractal_rank(
     prefix = prefix.astype(jnp.int32)
     if carry_in is None:
         carry_in = jnp.zeros((n_bins,), jnp.int32)
+    if n == 0:
+        return _rank_empty(n_bins, carry_in, bin_start)
+    # Inherit the data's varying-manual-axes so the group-scan carry
+    # typechecks under shard_map (VMA tracking); no-op numerically.
+    carry_in = carry_in + prefix[0] * 0
+    chunks = _rank_chunks(prefix, n, n_bins, batch)
+    num_chunks, chunk_len = chunks.shape
+    group = min(num_chunks,
+                max(1, _RANK_GROUP_ELEMS // (chunk_len * n_bins)))
+    gpad = (-num_chunks) % group
+    if gpad:  # sentinel chunks: contribute nothing, ranks sliced off
+        chunks = jnp.concatenate(
+            [chunks, jnp.full((gpad, chunk_len), n_bins, jnp.int32)])
+    groups = chunks.reshape(-1, group, chunk_len)
+    bins = jnp.arange(n_bins, dtype=jnp.int32)
+
+    def chunk_stats(chunk):
+        # one-hot (chunk, n_bins): on TPU this feeds the MXU (ones @ onehot
+        # for counts, strict-lower-triangular @ onehot for arrivals).  The
+        # final cumsum row *is* the chunk histogram — phase 1 and the
+        # intra-chunk arrival share one one-hot materialization.
+        onehot = (chunk[:, None] == bins[None, :]).astype(jnp.int32)
+        cum = jnp.cumsum(onehot, axis=0)
+        safe = jnp.clip(chunk, 0, n_bins - 1)
+        intra = jnp.take_along_axis(cum - onehot, safe[:, None], axis=1)[:, 0]
+        return intra, cum[-1]
+
+    def group_body(carry, gchunks):
+        # phase 1: all chunk histograms in this group at once
+        intra, hists = jax.vmap(chunk_stats)(gchunks)
+        # phase 2: every chunk's carry from one exclusive scan, then all
+        # chunks ranked in parallel
+        chunk_carry = carry[None, :] + jnp.cumsum(hists, axis=0) - hists
+        base = jax.vmap(
+            lambda ch, c: c[jnp.clip(ch, 0, n_bins - 1)])(gchunks, chunk_carry)
+        return carry + hists.sum(axis=0), base + intra
+
+    carry_out, ranks = jax.lax.scan(group_body, carry_in, groups)
+    ranks = ranks.reshape(-1)[:n]
+    return _rank_finish(prefix, ranks, carry_out - carry_in, carry_in,
+                        bin_start, n_bins)
+
+
+def fractal_rank_serial(
+    prefix: jnp.ndarray,
+    n_bins: int,
+    batch: int = 1024,
+    carry_in: Optional[jnp.ndarray] = None,
+    bin_start: Optional[jnp.ndarray] = None,
+):
+    """Serial-scan rank engine (the pre-executor implementation): a
+    ``lax.scan`` over chunks threading the running per-bin histogram.
+    Same contract as :func:`fractal_rank`; kept as the oracle for the
+    chunk-parallel engine's property tests and for the
+    ``bench_sortplan.py`` serial-vs-parallel comparison."""
+    n = prefix.shape[0]
+    prefix = prefix.astype(jnp.int32)
+    if carry_in is None:
+        carry_in = jnp.zeros((n_bins,), jnp.int32)
+    if n == 0:
+        return _rank_empty(n_bins, carry_in, bin_start)
     # Inherit the data's varying-manual-axes so the scan carry typechecks
     # under shard_map (JAX >= 0.8 VMA tracking); no-op numerically.
     carry_in = carry_in + prefix[0] * 0
-    # Bound the materialized one-hot tile (batch x n_bins) to ~8 MiB so wide
-    # leaf levels trade batch length for tile width — the same locality/
-    # parallelism trade the paper tunes in §III.C.  SortPlan keeps n_bins
-    # small enough that this cap rarely binds.
-    batch = min(batch, max(8, (1 << 21) // max(n_bins, 1)), max(n, 1))
-    pad = (-n) % batch
-    # Padding uses bin id ``n_bins`` which matches no one-hot column, so
-    # padded rows contribute nothing to counts or carries.
-    prefix_p = jnp.concatenate([prefix, jnp.full((pad,), n_bins, jnp.int32)]) if pad else prefix
-    chunks = prefix_p.reshape(-1, batch)
+    chunks = _rank_chunks(prefix, n, n_bins, batch)
     bins = jnp.arange(n_bins, dtype=jnp.int32)
 
     def body(carry, chunk):
-        # one-hot (batch, n_bins): on TPU this feeds the MXU (ones @ onehot
-        # for counts, strict-lower-triangular @ onehot for running arrivals).
         onehot = (chunk[:, None] == bins[None, :]).astype(jnp.int32)
-        running = jnp.cumsum(onehot, axis=0) - onehot  # arrivals before row i
-        intra = jnp.take_along_axis(running, jnp.clip(chunk, 0, n_bins - 1)[:, None], axis=1)[:, 0]
-        rank = carry[jnp.clip(chunk, 0, n_bins - 1)] + intra
-        return carry + onehot.sum(axis=0), rank
+        running = jnp.cumsum(onehot, axis=0) - onehot
+        safe = jnp.clip(chunk, 0, n_bins - 1)
+        intra = jnp.take_along_axis(running, safe[:, None], axis=1)[:, 0]
+        return carry + onehot.sum(axis=0), carry[safe] + intra
 
     carry_out, ranks = jax.lax.scan(body, carry_in, chunks)
     ranks = ranks.reshape(-1)[:n]
-    counts = carry_out - carry_in
-    if bin_start is None:
-        bin_start = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]]
-        )
-    rank = bin_start[jnp.clip(prefix, 0, n_bins - 1)] + ranks
-    return rank, counts, carry_out
+    return _rank_finish(prefix, ranks, carry_out - carry_in, carry_in,
+                        bin_start, n_bins)
 
 
 # ---------------------------------------------------------------------------
@@ -261,39 +383,7 @@ def reconstruct(counts: jnp.ndarray, trailing: jnp.ndarray, l_n: int, p: int,
 
 
 # ---------------------------------------------------------------------------
-# Plan execution
-# ---------------------------------------------------------------------------
-
-
-def _lsd_pass(u: jnp.ndarray, dp: DigitPass, batch: int) -> jnp.ndarray:
-    """One stable counting pass scattering the full keys by a digit."""
-    digit = ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
-    rank, _, _ = fractal_rank(digit, dp.n_bins, batch=batch)
-    return jnp.zeros_like(u).at[rank].set(u)
-
-
-def _execute_plan(keys: jnp.ndarray, plan: SortPlan, batch: int) -> jnp.ndarray:
-    """Run a :class:`SortPlan`: stable LSD digit passes, then the fractal
-    MSD pass whose prefix bits are reconstructed from bin positions."""
-    n = keys.shape[0]
-    u = keys.astype(jnp.uint32)
-    for dp in plan.passes[:-1]:
-        u = _lsd_pass(u, dp, batch)
-    last = plan.passes[-1]
-    pref = (u >> last.shift).astype(jnp.int32)
-    rank, counts, _ = fractal_rank(pref, last.n_bins, batch=batch)
-    if last.shift == 0:
-        # zero-payload entries: output from bin positions alone.
-        return reconstruct(counts, jnp.zeros((n,), jnp.uint32), last.bits, plan.p)
-    # compressed entries: the payload is the trailing bits only; the
-    # prefix is reconstructed from bin positions.
-    ent = jnp.zeros((n,), jnp.uint32).at[rank].set(
-        u & jnp.uint32((1 << last.shift) - 1))
-    return reconstruct(counts, ent, last.bits, plan.p)
-
-
-# ---------------------------------------------------------------------------
-# Public sorts
+# Public sorts — thin wrappers: build a SortPlan, hand it to a PlanExecutor
 # ---------------------------------------------------------------------------
 
 
@@ -308,7 +398,7 @@ def fractal_sort(keys: jnp.ndarray, p: int, l_n: Optional[int] = None,
     ``2**max_bins_log2`` (default ``2**4``; see bench_sortplan)."""
     n = keys.shape[0]
     plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
-    return _execute_plan(keys, plan, batch)
+    return PlanExecutor(JnpBackend(batch=batch)).run(keys, plan)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "batch", "max_bins_log2"))
@@ -319,17 +409,9 @@ def fractal_argsort(keys: jnp.ndarray, p: int, batch: int = 1024,
 
     Runs every plan pass as a payload-carrying LSD pass (the permutation is
     the payload, so there is nothing to reconstruct from bin positions)."""
-    n = keys.shape[0]
     assert p <= 32, "argsort covers p <= 32 via the digit plan"
-    plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
-    u = keys.astype(jnp.uint32)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    for dp in plan.passes:
-        digit = ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
-        rank, _, _ = fractal_rank(digit, dp.n_bins, batch=batch)
-        u = jnp.zeros_like(u).at[rank].set(u)
-        idx = jnp.zeros_like(idx).at[rank].set(idx)
-    return idx
+    plan = make_sort_plan(keys.shape[0], p, max_bins_log2=max_bins_log2)
+    return PlanExecutor(JnpBackend(batch=batch)).run_argsort(keys, plan)
 
 
 def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
@@ -338,28 +420,14 @@ def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
     """Streaming variant (paper §III.C/D): the input arrives in
     ``num_batches`` equal slices; the trie histogram is *cached and merged*
     across slices, then ranks stream through the shared carry and a single
-    scatter groups keys by the plan's MSD prefix; the remaining trailing
-    bits are ordered by the plan's LSD passes + reconstruction.
+    scatter groups entries by the plan's MSD prefix; the trailing bits are
+    ordered in place by the executor's segment-aware grouped-trailing
+    passes (no full-plan re-run over the grouped array).
 
     Returns ``(sorted_keys, per-slice histograms)`` so tests can check the
     merge telescopes: ``merge(h_1..h_B) == build(all keys)``.
     """
-    n = keys.shape[0]
-    plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
-    depth = plan.depth
-    t = p - depth
-    slices = jnp.array_split(keys, num_batches)
-    hists = [ft.build_histogram(s, p, depth) for s in slices]
-    merged = functools.reduce(ft.merge_histograms, hists)
-    counts = merged.leaf_counts
-    bin_start = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
-    carry = jnp.zeros(((1 << depth),), jnp.int32)
-    out = jnp.zeros((n,), keys.dtype)
-    for s in slices:
-        prefix = (s.astype(jnp.uint32) >> t).astype(jnp.int32)
-        rank, _, carry = fractal_rank(prefix, 1 << depth, batch=batch,
-                                      carry_in=carry, bin_start=bin_start)
-        out = out.at[rank].set(s)
-    if t > 0:
-        out = _execute_plan(out, plan, batch).astype(keys.dtype)
-    return out, hists
+    plan = make_sort_plan(keys.shape[0], p, l_n=l_n,
+                          max_bins_log2=max_bins_log2)
+    return PlanExecutor(JnpBackend(batch=batch)).run_streaming(
+        keys, plan, num_batches)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "ceil_log2",
+    "exclusive_cumsum",
     "trie_depth",
     "tapered_dtype",
     "tapered_bits",
@@ -44,6 +45,13 @@ __all__ = [
 
 # Skew margin (extra bits) on top of the balanced-subtree width estimate.
 _TAPER_MARGIN_BITS = 2
+
+
+def exclusive_cumsum(counts: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive prefix sum of a 1-D int count array (bin starts from bin
+    counts) — the scan every rank/placement stage shares."""
+    return jnp.concatenate(
+        [jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
 
 
 def ceil_log2(n: int) -> int:

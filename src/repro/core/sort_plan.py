@@ -38,6 +38,7 @@ __all__ = [
     "DigitPass",
     "SortPlan",
     "make_sort_plan",
+    "rank_chunk_len",
 ]
 
 # Default per-pass bin-count cap (2**4 = 16 bins).  Swept by
@@ -55,6 +56,23 @@ DEFAULT_MAX_BINS_LOG2 = 4
 # overhead dominates any one-hot-tile savings.
 _MIN_DIGIT_BITS = 4
 
+# Byte budget for the rank stage's materialized (chunk x n_bins) one-hot
+# tile; wide digits trade chunk length for tile width (paper §III.C).
+_RANK_TILE_BUDGET = 1 << 21
+
+# The segment-aware grouped-trailing mode keeps a (2**depth, 2**w) per-
+# segment digit table; when the table entries outnumber the keys by more
+# than this margin (log2) — or exceed the absolute cap — the table dwarfs
+# the key stream and the executor falls back to a full re-plan.
+_GROUPED_TABLE_MARGIN_LOG2 = 4
+_GROUPED_TABLE_LOG2_CAP = 20
+
+
+def rank_chunk_len(n_bins: int, base: int = 1024) -> int:
+    """Execution hint: rank-stage chunk length for an ``n_bins``-bin pass,
+    bounding the materialized one-hot tile at ``_RANK_TILE_BUDGET``."""
+    return max(8, min(base, _RANK_TILE_BUDGET // max(n_bins, 1)))
+
 
 @dataclasses.dataclass(frozen=True)
 class DigitPass:
@@ -67,6 +85,11 @@ class DigitPass:
     @property
     def n_bins(self) -> int:
         return 1 << self.bits
+
+    def rank_batch(self, base: int = 1024) -> int:
+        """Per-pass execution hint: the rank chunk length the executor
+        should stream this pass at (see :func:`rank_chunk_len`)."""
+        return rank_chunk_len(self.n_bins, base)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,8 +114,28 @@ class SortPlan:
     def num_passes(self) -> int:
         return len(self.passes)
 
+    @property
+    def grouped_table_log2(self) -> int:
+        """log2 size of the (segment, digit) table the segment-aware
+        grouped-trailing executor mode materializes: ``depth`` prefix
+        segments x the widest trailing digit."""
+        lsd_bits = max((d.bits for d in self.passes[:-1]), default=0)
+        return self.depth + lsd_bits
+
+    @property
+    def supports_grouped_trailing(self) -> bool:
+        """Execution hint: whether the trailing LSD passes can run
+        segment-aware over the prefix-grouped array (streaming/batched
+        path) instead of re-running the full plan.  False when the
+        per-segment digit table would dwarf the key stream — wide plans
+        (e.g. the paper's 16b+16b p=32 scheme) or wide-ish plans over
+        small inputs."""
+        cap = min(_GROUPED_TABLE_LOG2_CAP,
+                  ft.ceil_log2(max(self.n, 1)) + _GROUPED_TABLE_MARGIN_LOG2)
+        return self.trailing_bits > 0 and self.grouped_table_log2 <= cap
+
     def describe(self) -> str:
-        return "+".join(f"{dp.bits}b" for dp in self.passes)
+        return "+".join(f"{d.bits}b" for d in self.passes)
 
 
 def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,

@@ -83,29 +83,48 @@ def pltpu_scratch(shape, dtype):
     return pltpu.VMEM(shape, dtype)
 
 
+def fractal_rank_counts(digit: jnp.ndarray, n_bins: int,
+                        block: int = DEFAULT_BLOCK, interpret: bool = True,
+                        bin_start: jnp.ndarray = None):
+    """Kernel-path rank primitive on an already-extracted digit stream:
+    histogram kernel → exclusive scan (tiny: ``n_bins`` ints, host/VPU) →
+    rank kernel, the one-hot tile inside bounded at ``block * n_bins``.
+
+    This is the :class:`~repro.core.executor.PallasBackend`'s ``rank``
+    primitive, so its return matches the executor's streaming-carry
+    contract: ``(rank, counts, carry_out)`` with ``carry_out == counts``
+    (the kernel's carry lives in VMEM scratch and starts at zero per
+    call — cross-call streaming is the jnp backend's mode).  ``bin_start``
+    may be supplied when the global histogram is already known
+    (distributed merge).
+    """
+    from repro.core.fractal_tree import exclusive_cumsum
+    from repro.kernels.fractal_histogram import fractal_histogram
+
+    counts = fractal_histogram(digit, n_bins, block=block,
+                               interpret=interpret)
+    if bin_start is None:
+        bin_start = exclusive_cumsum(counts)
+    rank = fractal_rank_kernel(digit, bin_start, n_bins, block=block,
+                               interpret=interpret)
+    return rank, counts, counts
+
+
 def fractal_rank_digit(keys: jnp.ndarray, digit_pass,
                        block: int = DEFAULT_BLOCK, interpret: bool = True,
                        bin_start: jnp.ndarray = None):
     """Multi-digit driver: stable ranks on one :class:`DigitPass` digit.
 
-    Extracts the ``bits``-wide digit at ``shift`` from the raw key stream,
-    builds its histogram with the histogram kernel, scans it to exclusive
-    bin starts (tiny: ``2**bits`` ints, host/VPU), and runs the rank
-    kernel — the one-hot tile inside is bounded at ``block * 2**bits``.
+    Extracts the ``bits``-wide digit at ``shift`` from the raw key stream
+    and runs :func:`fractal_rank_counts` on it.
 
     Returns ``(rank, counts)``; ``bin_start`` may be supplied when the
     global histogram is already known (distributed merge).
     """
-    from repro.kernels.fractal_histogram import fractal_histogram
-
     dp = digit_pass
     digit = ((keys.astype(jnp.uint32) >> dp.shift)
              & (dp.n_bins - 1)).astype(jnp.int32)
-    counts = fractal_histogram(digit, dp.n_bins, block=block,
-                               interpret=interpret)
-    if bin_start is None:
-        bin_start = jnp.concatenate(
-            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
-    rank = fractal_rank_kernel(digit, bin_start, dp.n_bins, block=block,
-                               interpret=interpret)
+    rank, counts, _ = fractal_rank_counts(digit, dp.n_bins, block=block,
+                                          interpret=interpret,
+                                          bin_start=bin_start)
     return rank, counts

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.fractal_histogram import digit_histograms as _digit_hists
@@ -19,9 +18,6 @@ from repro.kernels.fractal_histogram import fractal_histogram as _hist
 from repro.kernels.fractal_rank import fractal_rank_digit as _rank_digit
 from repro.kernels.fractal_rank import fractal_rank_kernel as _rank
 from repro.kernels.fractal_reconstruct import fractal_reconstruct as _recon
-from repro.kernels.fractal_reconstruct import (
-    fractal_reconstruct_plan as _recon_plan,
-)
 from repro.kernels.flash_attention import flash_attention_kernel as _flash
 from repro.kernels.moe_dispatch import moe_dispatch as _dispatch
 
@@ -90,30 +86,20 @@ def fractal_sort_kernel(keys, p: int, block: int = 1024, interpret=None,
                         max_bins_log2=None):
     """End-to-end kernel-path sort for keys in [0, 2**p), p <= 32.
 
-    Executes a :class:`~repro.core.sort_plan.SortPlan` through the kernels:
-    per LSD pass, histogram → exclusive scan → rank → full-key scatter;
-    the final MSD pass scatters only the trailing-bit entries and rebuilds
-    prefix bits from bin positions (reconstruct) — the composition the
+    Thin wrapper: builds a :class:`~repro.core.sort_plan.SortPlan` and
+    hands it to a :class:`~repro.core.executor.PlanExecutor` over the
+    :class:`~repro.core.executor.PallasBackend` — per LSD pass, histogram
+    kernel → exclusive scan → rank kernel → full-key scatter; the final
+    MSD pass scatters only the trailing-bit entries and rebuilds prefix
+    bits from bin positions (reconstruct kernel) — the composition the
     paper calls FractalSortCPU(A), with the pass decomposition bounding
     every kernel's one-hot tile.
     """
     interpret = default_interpret() if interpret is None else interpret
-    n = keys.shape[0]
 
+    from repro.core.executor import PallasBackend, PlanExecutor
     from repro.core.sort_plan import make_sort_plan
 
-    plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
-    u = keys.astype(jnp.uint32)
-    for dp in plan.passes[:-1]:
-        rk, _ = rank_digit(u, dp, block=block, interpret=interpret)
-        u = jnp.zeros_like(u).at[rk].set(u)
-    last = plan.passes[-1]
-    rk, counts = rank_digit(u, last, block=block, interpret=interpret)
-    if last.shift > 0:
-        trailing = jnp.zeros((n,), jnp.int32).at[rk].set(
-            (u & ((1 << last.shift) - 1)).astype(jnp.int32))
-    else:
-        trailing = jnp.zeros((n,), jnp.int32)
-    out = _recon_plan(counts, trailing, plan, block=block,
-                      interpret=interpret)
-    return out.astype(keys.dtype)
+    plan = make_sort_plan(keys.shape[0], p, max_bins_log2=max_bins_log2)
+    backend = PallasBackend(block=block, interpret=interpret)
+    return PlanExecutor(backend).run(keys, plan).astype(keys.dtype)
