@@ -1,0 +1,154 @@
+"""Query-operator latency vs a pure-XLA ``jnp.sort``-based oracle.
+
+Each operator (ORDER BY, sort-merge join, GROUP BY aggregation) runs
+against the XLA comparison-sort equivalent of the same relational step —
+the "what would a jnp one-liner cost" baseline.  The oracle gets jitted
+end to end; the operators are host-level drivers over jitted executor
+primitives, so their numbers include the (amortizable) host orchestration
+the query layer actually pays.
+
+Modes (``python -m benchmarks.bench_query <mode>``):
+
+* (default) — the full operator table.
+* ``smoke`` — one ORDER BY point under a hard wall-clock budget (CI
+  guard: an operator-path regression fails the build fast).
+
+:func:`query_points` feeds the ``BENCH_sort.json`` record (see
+``benchmarks/run.py``) so operator perf is tracked across PRs next to the
+core sort.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.query import Table, group_by, order_by, sort_merge_join
+
+
+def _tables(n: int, n_right: int = 1 << 10, key_space: int = 1 << 10):
+    rng = np.random.default_rng(0)
+    left = Table({
+        "k": rng.integers(0, key_space, n).astype(np.int32),
+        "v": rng.integers(0, 1000, n).astype(np.int32),
+        "w": rng.standard_normal(n).astype(np.float32),
+    })
+    right = Table({
+        "k": rng.permutation(key_space)[:n_right].astype(np.int32),
+        "r": rng.integers(0, 1000, n_right).astype(np.int32),
+    })
+    return left, right
+
+
+def bench_order_by(n: int):
+    left, _ = _tables(n)
+    t_op = time_fn(lambda: order_by(left, [("k", "asc"), ("v", "desc")]))
+
+    k, v = left.column("k"), left.column("v")
+
+    @jax.jit
+    def oracle(k, v, w):
+        perm = jnp.lexsort((-v, k))
+        return k[perm], v[perm], w[perm]
+
+    t_or = time_fn(oracle, k, v, left.column("w"))
+    row(f"query/order_by/n{n}", t_op,
+        f"oracle_us={t_or * 1e6:.1f} ratio={t_op / t_or:.2f}x")
+    return t_op, t_or
+
+
+def bench_join(n: int):
+    left, right = _tables(n)
+    t_op = time_fn(lambda: sort_merge_join(left, right, "k"))
+
+    lk, lv = left.column("k"), left.column("v")
+    rk, rr = right.column("k"), right.column("r")
+
+    @jax.jit
+    def oracle(lk, lv, rk, rr):
+        # XLA equivalent: sort right run, probe per left row (unique right
+        # keys here, so one gather realizes the inner join)
+        perm = jnp.argsort(rk)
+        rks, rrs = rk[perm], rr[perm]
+        pos = jnp.searchsorted(rks, lk)
+        hit = rks[jnp.clip(pos, 0, rks.shape[0] - 1)] == lk
+        return lk, lv, rrs[jnp.clip(pos, 0, rks.shape[0] - 1)], hit
+
+    t_or = time_fn(oracle, lk, lv, rk, rr)
+    row(f"query/join/n{n}", t_op,
+        f"oracle_us={t_or * 1e6:.1f} ratio={t_op / t_or:.2f}x")
+    return t_op, t_or
+
+
+def bench_group_by(n: int, groups: int = 128):
+    rng = np.random.default_rng(1)
+    t = Table({"g": rng.integers(0, groups, n).astype(np.int32),
+               "v": rng.integers(0, 1000, n).astype(np.int32)})
+    t_op = time_fn(lambda: group_by(
+        t, "g", {"total": ("v", "sum"), "cnt": (None, "count")}))
+
+    g, v = t.column("g"), t.column("v")
+
+    @jax.jit
+    def oracle(g, v):
+        total = jax.ops.segment_sum(v, g, num_segments=groups)
+        cnt = jax.ops.segment_sum(jnp.ones_like(v), g, num_segments=groups)
+        return total, cnt
+
+    t_or = time_fn(oracle, g, v)
+    row(f"query/group_by/n{n}/g{groups}", t_op,
+        f"oracle_us={t_or * 1e6:.1f} ratio={t_op / t_or:.2f}x")
+    return t_op, t_or
+
+
+def run(sizes=(1 << 12, 1 << 15)):
+    out = {}
+    for n in sizes:
+        out[n] = {
+            "order_by": bench_order_by(n),
+            "join": bench_join(n),
+            "group_by": bench_group_by(n),
+        }
+    return out
+
+
+def query_points(n: int = 1 << 15) -> list:
+    """The per-PR BENCH_sort.json operator records (see run.py)."""
+    points = []
+    for op, fn in [("order_by", bench_order_by), ("join", bench_join),
+                   ("group_by", bench_group_by)]:
+        t_op, t_or = fn(n)
+        points.append({"op": op, "n": n, "wall_s": t_op,
+                       "oracle_wall_s": t_or})
+    return points
+
+
+# Hard wall for the CI smoke point (n=2**14 two-column ORDER BY).  Healthy
+# is tens of ms on a 2-core runner; the budget leaves ~2 orders of
+# magnitude before a pass-loop/codec regression trips it.
+SMOKE_BUDGET_S = 4.0
+
+
+def smoke(n: int = 1 << 14) -> float:
+    """One ORDER BY point under a hard budget (CI operator-path guard)."""
+    left, _ = _tables(n)
+    t = time_fn(lambda: order_by(left, [("k", "asc"), ("v", "desc")]))
+    row(f"query/smoke/n{n}", t, f"budget_s={SMOKE_BUDGET_S}")
+    if t > SMOKE_BUDGET_S:
+        raise SystemExit(
+            f"query smoke point took {t:.2f}s > {SMOKE_BUDGET_S}s budget: "
+            f"an operator-path regression landed")
+    return t
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else None
+    if mode == "smoke":
+        smoke()
+    else:
+        run()

@@ -11,29 +11,62 @@ trajectory is tracked across PRs.
   bench_throughput  Fig. 9                unit throughput
   bench_bandwidth   Fig. 10               b_eff = T_actual / B_DRAM
   bench_sortplan    (beyond paper)        SortPlan digit-width sweep
+  bench_query       (beyond paper)        query operators vs XLA oracle
   bench_moe_dispatch  (beyond paper)      dispatch vs argsort
   roofline          assignment §Roofline  from dry-run artifacts
 
 ``python benchmarks/run.py sort_json`` writes only the JSON record.
 """
 
+import datetime
 import functools
 import json
+import subprocess
 import sys
 
 # The points every PR's BENCH_sort.json records (n, p); small enough to
 # run in seconds, big enough that a pass-loop regression is visible.
 SORT_JSON_POINTS = ((1 << 12, 16), (1 << 15, 32))
 
+# Record schema history (the cross-PR reader keys on this):
+#   1 — {points: [{n, p, plan, ...}]}
+#   2 — + provenance {git_sha, git_dirty, date, jax} and query operator
+#       points
+SORT_JSON_SCHEMA = 2
+
+
+def _provenance() -> dict:
+    """Who produced this record: git sha + ISO date + jax version, so the
+    cross-PR perf trajectory is attributable to a commit and toolchain."""
+    import jax
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or "unknown"
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10).stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        sha, dirty = "unknown", False
+    return {
+        "git_sha": sha,
+        "git_dirty": dirty,  # True: numbers came from uncommitted code
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "jax": jax.__version__,
+    }
+
 
 def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
-    """Time :func:`fractal_sort` at the standard points and write the
-    machine-readable perf record (wall time + the analytic traffic model
-    behind the paper's b_eff figure)."""
+    """Time :func:`fractal_sort` at the standard points (plus the query
+    operators) and write the machine-readable perf record (wall time +
+    the analytic traffic model behind the paper's b_eff figure)."""
     import numpy as np
     import jax.numpy as jnp
 
     from benchmarks.bench_bandwidth import b_eff
+    from benchmarks.bench_query import query_points
     from benchmarks.common import time_fn
     from repro.core import fractal_sort, fractal_sort_stats, make_sort_plan
 
@@ -56,20 +89,29 @@ def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
             "analytic_bytes_per_key": st.bytes_per_key,
             "analytic_b_eff": b_eff(st),
         })
-    record = {"schema": 1, "points": results}
+    record = {
+        "schema": SORT_JSON_SCHEMA,
+        "provenance": _provenance(),
+        "points": results,
+        "query": query_points(),
+    }
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
-    print(f"wrote {path}: " + "; ".join(
-        f"n={r['n']} p={r['p']} {r['wall_s'] * 1e3:.1f}ms "
-        f"b_eff={r['analytic_b_eff']:.3f}" for r in results))
+    print(f"wrote {path} (sha={record['provenance']['git_sha'][:9]}): "
+          + "; ".join(
+              f"n={r['n']} p={r['p']} {r['wall_s'] * 1e3:.1f}ms "
+              f"b_eff={r['analytic_b_eff']:.3f}" for r in results)
+          + " | query: " + "; ".join(
+              f"{q['op']} {q['wall_s'] * 1e3:.1f}ms"
+              for q in record["query"]))
     return record
 
 
 def main() -> None:
     from benchmarks import (bench_batches, bench_bandwidth, bench_latency,
-                            bench_memory, bench_moe_dispatch, bench_sortplan,
-                            bench_throughput, roofline)
+                            bench_memory, bench_moe_dispatch, bench_query,
+                            bench_sortplan, bench_throughput, roofline)
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
     if only == "sort_json":
@@ -79,7 +121,7 @@ def main() -> None:
         "latency": bench_latency, "memory": bench_memory,
         "batches": bench_batches, "throughput": bench_throughput,
         "bandwidth": bench_bandwidth, "sortplan": bench_sortplan,
-        "moe_dispatch": bench_moe_dispatch,
+        "query": bench_query, "moe_dispatch": bench_moe_dispatch,
         "roofline": roofline,
     }
     print("name,us_per_call,derived")

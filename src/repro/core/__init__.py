@@ -36,6 +36,7 @@ from repro.core.fractal_sort import (
     fractal_rank_serial,
     fractal_sort,
     fractal_sort_batched,
+    fractal_sort_pairs,
     fractal_sort_stats,
     reconstruct,
 )
@@ -47,4 +48,9 @@ from repro.core.baselines import (
     radix_sort_stats,
     xla_sort,
 )
-from repro.core.distributed import distributed_fractal_sort, make_distributed_sort
+from repro.core.distributed import (
+    distributed_fractal_argsort,
+    distributed_fractal_sort,
+    make_distributed_argsort,
+    make_distributed_sort,
+)

@@ -51,15 +51,23 @@ from repro.core.executor import DistributedBackend, PlanExecutor
 from repro.core.fractal_sort import fractal_rank
 from repro.core.sort_plan import make_sort_plan
 
-__all__ = ["distributed_fractal_sort", "make_distributed_sort"]
+__all__ = [
+    "distributed_fractal_sort",
+    "distributed_fractal_argsort",
+    "make_distributed_argsort",
+    "make_distributed_sort",
+]
 
 
 def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
-                      capacity: int, batch: int, taper_wire: bool):
+                      capacity: int, batch: int, taper_wire: bool,
+                      payloads: tuple = ()):
     """One stable distributed counting pass on key bits [shift, shift+bits).
 
     ``u`` is this device's uint32 key shard; returns the re-shuffled shard
-    (keys placed at their exact global rank for this field) + overflow flag.
+    ``(u, *payloads)`` (keys placed at their exact global rank for this
+    field, payload arrays routed through the same all_to_all buckets) +
+    overflow flag.
     """
     n_local = u.shape[0]
     D = jax.lax.psum(1, axis)
@@ -101,21 +109,30 @@ def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
         jnp.any(dest_counts > capacity).astype(jnp.int32), axis) > 0
 
     # fixed-capacity buckets; overflowing entries drop (flagged above).
-    send_keys = jnp.zeros((D, capacity), jnp.uint32).at[
-        dest, pos_in_bucket].set(u, mode="drop")
+    def route(vals):
+        send = jnp.zeros((D, capacity), vals.dtype).at[
+            dest, pos_in_bucket].set(vals, mode="drop")
+        return jax.lax.all_to_all(send, axis, split_axis=0,
+                                  concat_axis=0).reshape(-1)
+
     send_slot = jnp.full((D, capacity), -1, jnp.int32).at[
         dest, pos_in_bucket].set(slot_in_dest, mode="drop")
-
-    recv_keys = jax.lax.all_to_all(send_keys, axis, split_axis=0, concat_axis=0)
-    recv_slot = jax.lax.all_to_all(send_slot, axis, split_axis=0, concat_axis=0)
-    recv_keys = recv_keys.reshape(-1)
-    recv_slot = recv_slot.reshape(-1)
+    recv_slot = jax.lax.all_to_all(send_slot, axis, split_axis=0,
+                                   concat_axis=0).reshape(-1)
+    recv_keys = route(u)
 
     valid = recv_slot >= 0
-    out = jnp.zeros((n_local,), jnp.uint32).at[
-        jnp.where(valid, recv_slot, n_local)].set(
-        jnp.where(valid, recv_keys, 0), mode="drop")
-    return out, overflow
+    slot = jnp.where(valid, recv_slot, n_local)
+
+    def place(recv, dtype):
+        return jnp.zeros((n_local,), dtype).at[slot].set(
+            jnp.where(valid, recv, 0), mode="drop")
+
+    out = place(recv_keys, jnp.uint32)
+    # payload carry: each payload column rides its own all_to_all through
+    # the same buckets/slots (one extra collective per column per pass).
+    out_payloads = tuple(place(route(pv), pv.dtype) for pv in payloads)
+    return (out, *out_payloads), overflow
 
 
 def _sort_body(keys, plan, axis: str, capacity: int, batch: int,
@@ -129,6 +146,33 @@ def _sort_body(keys, plan, axis: str, capacity: int, batch: int,
     overflow = (backend.overflow if backend.overflow is not None
                 else jnp.zeros((), jnp.bool_))
     return out.astype(keys.dtype), overflow
+
+
+def _make_distributed(body_fn, mesh, axis: str, p: int,
+                      capacity_factor: Optional[float],
+                      batch: int, taper_wire: bool,
+                      max_bins_log2: Optional[int]):
+    """Shared scaffolding for the distributed entry points: plan build,
+    the capacity/overflow rule, and the shard_map wrapping — so sort and
+    argsort can never diverge on them.  ``body_fn`` runs inside the
+    shard_map region and returns ``(per-shard output, overflow)``."""
+    D = mesh.shape[axis]
+    cf = capacity_factor if capacity_factor is not None else float(D)
+
+    def fn(keys):
+        n = keys.shape[0]
+        plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
+        cap = min(int(cf * (n // D) / D) + 1, n // D)
+        body = functools.partial(
+            body_fn, plan=plan, axis=axis, capacity=cap, batch=batch,
+            taper_wire=taper_wire)
+        return compat.shard_map(
+            body, mesh=mesh,
+            in_specs=P(axis),
+            out_specs=(P(axis), P()),
+        )(keys)
+
+    return fn
 
 
 def make_distributed_sort(mesh, axis: str, p: int,
@@ -147,25 +191,50 @@ def make_distributed_sort(mesh, axis: str, p: int,
     pass costs one more all_to_all; on real ICI fewer/wider passes win —
     pass 16 for the paper's two-field scheme).
     """
-    D = mesh.shape[axis]
-    cf = capacity_factor if capacity_factor is not None else float(D)
-
-    def fn(keys):
-        n = keys.shape[0]
-        plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
-        cap = min(int(cf * (n // D) / D) + 1, n // D)
-        body = functools.partial(
-            _sort_body, plan=plan, axis=axis, capacity=cap, batch=batch,
-            taper_wire=taper_wire)
-        return compat.shard_map(
-            body, mesh=mesh,
-            in_specs=P(axis),
-            out_specs=(P(axis), P()),
-        )(keys)
-
-    return fn
+    return _make_distributed(_sort_body, mesh, axis, p, capacity_factor,
+                             batch, taper_wire, max_bins_log2)
 
 
 def distributed_fractal_sort(keys, mesh, axis: str, p: int, **kw):
     """One-shot convenience wrapper around :func:`make_distributed_sort`."""
     return make_distributed_sort(mesh, axis, p, **kw)(keys)
+
+
+def _argsort_body(keys, plan, axis: str, capacity: int, batch: int,
+                  taper_wire: bool):
+    """Pairs run over the DistributedBackend with the *global* arrival
+    index as the payload: every pass is exact placement, so the payload
+    lands at its key's global rank — the stable permutation, sharded like
+    the keys.  Runs inside the shard_map region."""
+    n_local = keys.shape[0]
+    me = jax.lax.axis_index(axis)
+    idx = me * n_local + jnp.arange(n_local, dtype=jnp.int32)
+    backend = DistributedBackend(axis=axis, capacity=capacity, batch=batch,
+                                 taper_wire=taper_wire)
+    _, perm = PlanExecutor(backend).run_pairs(keys, idx, plan)
+    overflow = (backend.overflow if backend.overflow is not None
+                else jnp.zeros((), jnp.bool_))
+    return perm, overflow
+
+
+def make_distributed_argsort(mesh, axis: str, p: int,
+                             capacity_factor: Optional[float] = None,
+                             batch: int = 1024,
+                             taper_wire: bool = True,
+                             max_bins_log2: Optional[int] = None):
+    """Build a jit-able distributed *argsort* over ``mesh[axis]``.
+
+    Returns ``fn(keys_global) -> (perm_global, overflow)`` with
+    ``keys[perm]`` stably sorted — same contract as
+    :func:`~repro.core.fractal_sort.fractal_argsort`, same sharding and
+    capacity rules as :func:`make_distributed_sort`.  The permutation is
+    the payload column of an executor pairs run, so duplicates keep
+    (device, arrival) order — the join/group-by hot case at pod scale.
+    """
+    return _make_distributed(_argsort_body, mesh, axis, p, capacity_factor,
+                             batch, taper_wire, max_bins_log2)
+
+
+def distributed_fractal_argsort(keys, mesh, axis: str, p: int, **kw):
+    """One-shot convenience wrapper around :func:`make_distributed_argsort`."""
+    return make_distributed_argsort(mesh, axis, p, **kw)(keys)

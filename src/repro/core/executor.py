@@ -30,8 +30,13 @@ Executor responsibilities (backend-independent):
 * **empty-input guard** — ``n == 0`` returns immediately (no pass ranks an
   empty stream).
 
-Two executor modes beyond the plain sort:
+Three executor modes beyond the plain sort:
 
+* :meth:`PlanExecutor.run_pairs` carries an arbitrary payload column
+  (e.g. a query row id) through every pass — including the fractal MSD
+  pass, where the key prefix is reconstructed from bin positions but the
+  payload still moves with its entry.  The query operators
+  (``repro.query``) bottom out here.
 * :meth:`PlanExecutor.run_argsort` carries the arrival index as the
   payload through *every* pass (nothing to reconstruct — the permutation
   is the output).
@@ -109,10 +114,18 @@ class PassBackend:
 
     def lsd_pass(self, u: jnp.ndarray, dp: DigitPass) -> jnp.ndarray:
         """One stable counting pass scattering the full keys by a digit."""
+        u, = self.lsd_pass_pairs(u, (), dp)
+        return u
+
+    def lsd_pass_pairs(self, u: jnp.ndarray, payloads: tuple,
+                       dp: DigitPass) -> tuple:
+        """One stable counting pass moving the keys *and* every payload
+        array to the digit's rank order.  Returns ``(u, *payloads)``.
+        Backends that fuse rank + placement (distributed) override this so
+        payloads ride the same routing as the keys."""
         rank, _, _ = self.rank(_digit_of(u, dp), dp.n_bins,
                                batch_hint=dp.rank_batch(self.rank_base))
-        (u,) = self.scatter(rank, u)
-        return u
+        return self.scatter(rank, u, *payloads)
 
     def reconstruct(self, counts: jnp.ndarray, trailing: jnp.ndarray,
                     plan: SortPlan) -> jnp.ndarray:
@@ -209,11 +222,15 @@ class DistributedBackend(PassBackend):
             "the distributed pass fuses rank + placement; use lsd_pass")
 
     def lsd_pass(self, u, dp):
+        u, = self.lsd_pass_pairs(u, (), dp)
+        return u
+
+    def lsd_pass_pairs(self, u, payloads, dp):
         from repro.core.distributed import _distributed_pass
 
         out, ov = _distributed_pass(u, dp.shift, dp.bits, self.axis,
                                     self.capacity, self.batch,
-                                    self.taper_wire)
+                                    self.taper_wire, payloads=payloads)
         self.overflow = ov if self.overflow is None else self.overflow | ov
         return out
 
@@ -257,6 +274,37 @@ class PlanExecutor:
             trailing = jnp.zeros_like(u)
         return self.backend.reconstruct(counts, trailing, plan)
 
+    # -- key–value (pairs) sort ---------------------------------------------
+
+    def run_pairs(self, keys: jnp.ndarray, values: jnp.ndarray,
+                  plan: SortPlan):
+        """Sort ``(keys, values)`` pairs by key: every LSD pass carries the
+        payload alongside the keys, and the final fractal MSD pass scatters
+        the payload next to the compressed trailing-bit entries — the
+        prefix bits are still reconstructed from bin positions (Alg. 5),
+        only the payload and trailing bits travel.  Returns
+        ``(sorted_keys, values_in_sorted_key_order)``; ties keep arrival
+        order (stable), which is what the query operators lean on for
+        multi-word keys and reproducible joins."""
+        if keys.shape[0] == 0:
+            return keys, values
+        u = keys.astype(jnp.uint32)
+        for dp in plan.passes[:-1]:
+            u, values = self.backend.lsd_pass_pairs(u, (values,), dp)
+        last = plan.passes[-1]
+        if not self.backend.reconstructs:
+            return self.backend.lsd_pass_pairs(u, (values,), last)
+        rank, counts, _ = self.backend.rank(
+            _digit_of(u, last), last.n_bins,
+            batch_hint=last.rank_batch(self.backend.rank_base))
+        if last.shift:
+            trailing, values = self.backend.scatter(
+                rank, u & jnp.uint32((1 << last.shift) - 1), values)
+        else:
+            (values,) = self.backend.scatter(rank, values)
+            trailing = jnp.zeros_like(u)
+        return self.backend.reconstruct(counts, trailing, plan), values
+
     # -- argsort ------------------------------------------------------------
 
     def run_argsort(self, keys: jnp.ndarray, plan: SortPlan) -> jnp.ndarray:
@@ -269,10 +317,7 @@ class PlanExecutor:
             return idx
         u = keys.astype(jnp.uint32)
         for dp in plan.passes:
-            rank, _, _ = self.backend.rank(
-                _digit_of(u, dp), dp.n_bins,
-                batch_hint=dp.rank_batch(self.backend.rank_base))
-            u, idx = self.backend.scatter(rank, u, idx)
+            u, idx = self.backend.lsd_pass_pairs(u, (idx,), dp)
         return idx
 
     # -- segment-aware grouped-trailing mode --------------------------------

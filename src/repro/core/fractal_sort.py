@@ -86,6 +86,7 @@ __all__ = [
     "fractal_sort",
     "fractal_argsort",
     "fractal_sort_batched",
+    "fractal_sort_pairs",
     "fractal_sort_stats",
     "reconstruct",
 ]
@@ -399,6 +400,27 @@ def fractal_sort(keys: jnp.ndarray, p: int, l_n: Optional[int] = None,
     n = keys.shape[0]
     plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
     return PlanExecutor(JnpBackend(batch=batch)).run(keys, plan)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "l_n", "batch", "max_bins_log2"))
+def fractal_sort_pairs(keys: jnp.ndarray, values: jnp.ndarray, p: int,
+                       l_n: Optional[int] = None, batch: int = 1024,
+                       max_bins_log2: Optional[int] = None):
+    """Key–value sort: ``(sorted_keys, values_in_sorted_key_order)`` for
+    integer keys in [0, 2**p) and one payload column of equal length (any
+    fixed-width dtype — the query layer passes int32 row ids).
+
+    The payload rides the executor's scatter path on *every* pass: full
+    keys + payload through the LSD passes, then payload + compressed
+    trailing-bit entries through the fractal MSD pass, whose prefix bits
+    are still reconstructed from bin positions (Alg. 5) — sorting
+    (key, row-id) pairs costs the payload's bytes but keeps the
+    compressed-entry bandwidth win on the keys.  Stable: equal keys keep
+    arrival order, which `order_by` and the sort-merge join rely on."""
+    plan = make_sort_plan(keys.shape[0], p, l_n=l_n,
+                          max_bins_log2=max_bins_log2)
+    return PlanExecutor(JnpBackend(batch=batch)).run_pairs(keys, values, plan)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "batch", "max_bins_log2"))

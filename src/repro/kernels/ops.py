@@ -31,6 +31,7 @@ __all__ = [
     "reconstruct",
     "moe_dispatch",
     "fractal_sort_kernel",
+    "fractal_sort_pairs_kernel",
 ]
 
 
@@ -103,3 +104,21 @@ def fractal_sort_kernel(keys, p: int, block: int = 1024, interpret=None,
     plan = make_sort_plan(keys.shape[0], p, max_bins_log2=max_bins_log2)
     backend = PallasBackend(block=block, interpret=interpret)
     return PlanExecutor(backend).run(keys, plan).astype(keys.dtype)
+
+
+def fractal_sort_pairs_kernel(keys, values, p: int, block: int = 1024,
+                              interpret=None, max_bins_log2=None):
+    """Kernel-path key–value sort: the payload column rides every pass's
+    scatter next to the keys (rank kernel per digit, reconstruct kernel
+    for the prefix bits), mirroring
+    :func:`repro.core.fractal_sort.fractal_sort_pairs` on the
+    :class:`~repro.core.executor.PallasBackend`."""
+    interpret = default_interpret() if interpret is None else interpret
+
+    from repro.core.executor import PallasBackend, PlanExecutor
+    from repro.core.sort_plan import make_sort_plan
+
+    plan = make_sort_plan(keys.shape[0], p, max_bins_log2=max_bins_log2)
+    backend = PallasBackend(block=block, interpret=interpret)
+    out, vals = PlanExecutor(backend).run_pairs(keys, values, plan)
+    return out.astype(keys.dtype), vals

@@ -1,0 +1,25 @@
+"""Query-execution subsystem: typed key codecs + sort-backed relational
+operators, every one bottoming out in the
+:class:`~repro.core.executor.PlanExecutor` (see ``operators.py``)."""
+
+from repro.query.codec import (
+    BoolCodec,
+    Codec,
+    ColumnSpec,
+    CompositeCodec,
+    Float32Codec,
+    Float64Codec,
+    IntCodec,
+    UIntCodec,
+    infer_codec,
+    word_widths,
+)
+from repro.query.operators import (
+    distinct,
+    group_by,
+    order_by,
+    sort_merge_join,
+    sort_rowids,
+    top_k,
+)
+from repro.query.table import Table

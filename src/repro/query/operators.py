@@ -1,0 +1,242 @@
+"""Sort-backed relational operators, every one bottoming out in the
+:class:`~repro.core.executor.PlanExecutor`.
+
+The paper motivates FractalSort through query execution — "sorting as a
+core operation in query processing, indexing and join execution" — and
+this module is that workload: ``order_by`` (multi-column asc/desc),
+``sort_merge_join`` (inner), ``group_by`` (sum/count/min/max from segment
+boundaries of the sorted key column), ``distinct`` and ``top_k``.
+
+The shape is always the same:
+
+1. **encode** — an order-preserving :mod:`~repro.query.codec` turns the
+   key columns into unsigned codes whose exact bit width sizes the
+   :class:`~repro.core.sort_plan.SortPlan` (an 8-bit key runs a two-pass
+   plan, not a 32-bit one);
+2. **pairs sort** — one executor run carries an int32 row-id payload
+   through every pass (:func:`~repro.core.fractal_sort.fractal_sort_pairs`;
+   the fractal MSD pass still reconstructs prefix bits from bin positions
+   — only the payload and trailing bits travel).  Multi-word codes (>32
+   bits: float64, wide composites) chain one stable pass set per word,
+   least-significant word first — lexicographic == numeric order;
+3. **gather / segment scan** — payload columns move by one gather of the
+   row-id column; group/distinct boundaries fall out of the sorted key
+   column; joins merge two sorted runs with two ``searchsorted`` probes.
+
+Operators are host-level drivers (they sync small scalars like segment
+counts); the data-sized work — every rank, scatter and gather — runs
+through the executor's jitted primitives.  No operator grows a pass
+loop: operators build plans, and the plan-pass loop stays solely in
+``core/executor.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractal_argsort, fractal_sort_pairs
+from repro.query.codec import (
+    Codec,
+    ColumnSpec,
+    CompositeCodec,
+    infer_codec,
+    word_widths,
+)
+from repro.query.table import Table
+
+__all__ = [
+    "order_by",
+    "sort_merge_join",
+    "group_by",
+    "distinct",
+    "top_k",
+    "sort_rowids",
+]
+
+def _normalize_by(by) -> Tuple[Tuple[str, bool], ...]:
+    """``by``: one "col", or a list of "col" / ("col", asc-bool) /
+    ("col", "asc"|"desc")."""
+    if isinstance(by, str):
+        by = [by]
+    out = []
+    for item in by:
+        if isinstance(item, str):
+            out.append((item, True))
+        else:
+            name, asc = item
+            if isinstance(asc, str):
+                assert asc in ("asc", "desc"), f"bad direction {asc!r}"
+                asc = asc == "asc"
+            out.append((name, bool(asc)))
+    assert out, "need at least one key column"
+    return tuple(out)
+
+
+def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
+    """(CompositeCodec, encoded (n, W) words) for the key columns."""
+    specs, cols = [], []
+    for name, asc in _normalize_by(by):
+        col = table.column(name)
+        codec = (codecs or {}).get(name) or infer_codec(col)
+        specs.append(ColumnSpec(codec, ascending=asc))
+        cols.append(col)
+    codec = CompositeCodec(specs)
+    return codec, codec.encode(cols)
+
+
+def sort_rowids(words: jnp.ndarray, bits: int):
+    """Stably sort multi-word codes: ``(sorted_words, rowids)``.
+
+    Single-word codes run one executor pairs plan (row ids ride the
+    scatter path, prefix bits reconstructed on the MSD pass).  Multi-word
+    codes chain one stable argsort per 32-bit word, least-significant
+    first — stability makes the composition lexicographic, i.e. numeric
+    on the full code.
+    """
+    widths = word_widths(bits)
+    n = words.shape[0]
+    if n == 0:
+        return words, jnp.zeros((0,), jnp.int32)
+    if len(widths) == 1:
+        sorted_keys, rowids = fractal_sort_pairs(
+            words[:, 0], jnp.arange(n, dtype=jnp.int32), p=widths[0])
+        return sorted_keys.astype(jnp.uint32)[:, None], rowids
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for j in range(len(widths) - 1, -1, -1):
+        sub = fractal_argsort(words[perm, j], p=widths[j])
+        perm = perm[sub]
+    return words[perm], perm
+
+
+def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None
+             ) -> Table:
+    """Multi-column ORDER BY (stable): rows reordered by one gather of the
+    pairs sort's row-id payload."""
+    codec, words = _composite_for(table, by, codecs)
+    _, rowids = sort_rowids(words, codec.bits)
+    return table.take(rowids)
+
+
+def top_k(table: Table, by, k: int,
+          codecs: Optional[Mapping[str, Codec]] = None) -> Table:
+    """First ``k`` rows of the stable ORDER BY (ties keep arrival order)."""
+    return order_by(table, by, codecs).head(k)
+
+
+def _segments(sorted_words: jnp.ndarray) -> np.ndarray:
+    """Start index of every run of equal codes in a sorted word matrix."""
+    w = np.asarray(sorted_words)
+    if w.shape[0] == 0:
+        return np.zeros((0,), np.int64)
+    change = np.any(w[1:] != w[:-1], axis=1)
+    return np.flatnonzero(np.concatenate([[True], change]))
+
+
+def distinct(table: Table, by=None,
+             codecs: Optional[Mapping[str, Codec]] = None) -> Table:
+    """DISTINCT ON the key columns: the first-arriving row of every
+    distinct key combination, output sorted by key (the stable pairs sort
+    makes "first" well-defined)."""
+    by = _normalize_by(by if by is not None else table.column_names)
+    codec, words = _composite_for(table, by, codecs)
+    sorted_words, rowids = sort_rowids(words, codec.bits)
+    starts = _segments(sorted_words)
+    return table.take(jnp.asarray(np.asarray(rowids)[starts]))
+
+
+# aggregation spec: out_name -> (column | None, "sum"|"count"|"min"|"max")
+_AGG_UFUNC = {"sum": np.add, "min": np.minimum, "max": np.maximum}
+
+
+def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
+             codecs: Optional[Mapping[str, Codec]] = None) -> Table:
+    """GROUP BY + aggregation from segment boundaries of the sorted key.
+
+    One pairs sort groups equal keys into contiguous segments; every
+    aggregate is then a ``reduceat`` over the gathered value column —
+    no hashing, no per-group loops (the Leyenda-style sort-based
+    aggregation).  Output: one row per group, sorted by key; key columns
+    decoded from the segment-start codes.
+    """
+    by = _normalize_by(by)
+    codec, words = _composite_for(table, by, codecs)
+    sorted_words, rowids = sort_rowids(words, codec.bits)
+    starts = _segments(sorted_words)
+    rid = np.asarray(rowids)
+    n = rid.shape[0]
+    cols = {}
+    key_cols = codec.decode(jnp.asarray(np.asarray(sorted_words)[starts])) \
+        if len(starts) else tuple(
+            table.column(name)[:0] for name, _ in by)
+    for (name, _), vals in zip(by, key_cols):
+        cols[name] = vals
+    counts = np.diff(starts, append=n)
+    for out_name, (col, op) in aggs.items():
+        assert op in ("sum", "count", "min", "max"), f"bad aggregate {op!r}"
+        if op == "count":
+            cols[out_name] = jnp.asarray(counts.astype(np.int32))
+            continue
+        vals = np.asarray(table.column(col))[rid]
+        if len(starts) == 0:
+            cols[out_name] = jnp.asarray(vals[:0])
+            continue
+        agg = _AGG_UFUNC[op].reduceat(vals, starts)
+        cols[out_name] = agg if vals.dtype == np.float64 else jnp.asarray(agg)
+    return Table(cols)
+
+
+def sort_merge_join(left: Table, right: Table, on,
+                    codecs: Optional[Mapping[str, Codec]] = None,
+                    suffixes: Tuple[str, str] = ("_l", "_r")) -> Table:
+    """Inner join over two fractal-sorted runs.
+
+    Both sides' key columns encode through the *same* composite codec
+    (so equal keys share a code), each side runs one pairs sort, and the
+    merge is two ``searchsorted`` probes of the left codes into the right
+    run — per left row, its matching right range ``[lo, hi)`` — expanded
+    into row-id pairs.  Output rows are sorted by key, ties ordered by
+    (left arrival, right arrival): both sorts are stable.
+
+    Join keys must encode into one 32-bit word (``codec.bits <= 32``);
+    wider keys are an open item (lexicographic multi-word merge).
+    """
+    by = _normalize_by(on)
+    for name, asc in by:
+        assert asc, "join keys have no direction; use plain column names"
+    codec_l, words_l = _composite_for(left, on, codecs)
+    codec_r, words_r = _composite_for(right, on, codecs)
+    assert [(type(s.codec), s.codec.bits) for s in codec_l.specs] == \
+        [(type(s.codec), s.codec.bits) for s in codec_r.specs], (
+        "join key columns must encode identically (same codec type and "
+        "width per column) on both sides; pass an explicit shared codec "
+        "via codecs=")
+    assert codec_l.bits <= 32, (
+        f"join keys encode to {codec_l.bits} bits > 32: multi-word merge "
+        "is an open item — narrow the key codecs")
+    lc, lrid = sort_rowids(words_l, codec_l.bits)
+    rc, rrid = sort_rowids(words_r, codec_r.bits)
+    lc, rc = lc[:, 0], rc[:, 0]
+    lo = jnp.searchsorted(rc, lc, side="left")
+    hi = jnp.searchsorted(rc, lc, side="right")
+    cnt = np.asarray(hi - lo)
+    total = int(cnt.sum())
+    lpos = np.repeat(np.arange(cnt.shape[0]), cnt)
+    seg_start = np.repeat(np.cumsum(cnt) - cnt, cnt)
+    rpos = np.asarray(lo)[lpos] + (np.arange(total) - seg_start)
+    lrows = jnp.asarray(np.asarray(lrid)[lpos])
+    rrows = jnp.asarray(np.asarray(rrid)[rpos])
+    ltab, rtab = left.take(lrows), right.take(rrows)
+    keys = {name for name, _ in by}
+    out = {name: ltab.column(name) for name, _ in by}
+    for name in left.column_names:
+        if name not in keys:
+            clash = name in right.column_names
+            out[name + suffixes[0] if clash else name] = ltab.column(name)
+    for name in right.column_names:
+        if name not in keys:
+            clash = name in left.column_names
+            out[name + suffixes[1] if clash else name] = rtab.column(name)
+    return Table(out)

@@ -1,0 +1,87 @@
+"""Minimal columnar table: named equal-length columns, gather-based ops.
+
+Just enough relational state for the query operators: columns are jnp (or
+numpy — float64 columns stay numpy, this repo runs JAX x64-off) arrays
+keyed by name, insertion-ordered.  Row movement is always a *gather* by a
+row-id column produced by a sort (``take``), never a per-column sort —
+one executor pairs run orders any number of payload columns.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Table"]
+
+
+def _is_np(col) -> bool:
+    return isinstance(col, np.ndarray)
+
+
+class Table:
+    """Named, equal-length, insertion-ordered columns."""
+
+    def __init__(self, columns: Mapping[str, object]):
+        assert len(columns) >= 1, "a Table needs at least one column"
+        cols = {}
+        n = None
+        for name, col in columns.items():
+            col = col if _is_np(col) else jnp.asarray(col)
+            assert col.ndim == 1, f"column {name!r} must be 1-D"
+            if n is None:
+                n = col.shape[0]
+            assert col.shape[0] == n, (
+                f"column {name!r} has {col.shape[0]} rows, expected {n}")
+            cols[name] = col
+        self._cols = cols
+        self._n = n
+
+    # -- shape / access -----------------------------------------------------
+
+    @property
+    def num_rows(self) -> int:
+        return self._n
+
+    @property
+    def column_names(self):
+        return tuple(self._cols)
+
+    def column(self, name: str):
+        assert name in self._cols, (
+            f"no column {name!r}; have {list(self._cols)}")
+        return self._cols[name]
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __repr__(self) -> str:
+        cols = ", ".join(f"{k}:{np.dtype(v.dtype)}"
+                         for k, v in self._cols.items())
+        return f"Table({self._n} rows; {cols})"
+
+    # -- relational building blocks ------------------------------------------
+
+    def select(self, names: Sequence[str]) -> "Table":
+        return Table({n: self.column(n) for n in names})
+
+    def take(self, rowids) -> "Table":
+        """Gather every column at ``rowids`` (a sort's payload output)."""
+        out = {}
+        for name, col in self._cols.items():
+            idx = np.asarray(rowids) if _is_np(col) else rowids
+            out[name] = col[idx]
+        return Table(out)
+
+    def head(self, k: int) -> "Table":
+        return Table({n: c[:min(k, self._n)] for n, c in self._cols.items()})
+
+    def with_columns(self, columns: Mapping[str, object]) -> "Table":
+        merged = dict(self._cols)
+        merged.update(columns)
+        return Table(merged)
+
+    def to_numpy(self) -> dict:
+        return {n: np.asarray(c) for n, c in self._cols.items()}

@@ -35,6 +35,10 @@ def sampled_from(values) -> _Strategy:
     return _Strategy(lambda rng: rng.choice(values))
 
 
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
 def lists(elements: _Strategy, min_size: int = 0,
           max_size: int = 10) -> _Strategy:
     def draw(rng: random.Random):
@@ -50,6 +54,7 @@ class strategies:
     integers = staticmethod(integers)
     sampled_from = staticmethod(sampled_from)
     lists = staticmethod(lists)
+    booleans = staticmethod(booleans)
 
 
 def settings(max_examples: int = _FALLBACK_EXAMPLES, deadline=None, **_):

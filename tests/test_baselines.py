@@ -1,0 +1,114 @@
+"""Baseline sorts (`core/baselines.py`): property tests of
+``lsd_radix_sort`` and ``bitonic_sort`` against the ``jnp.sort`` oracle
+across adversarial distributions — they back the paper's bandwidth
+comparison but had no dedicated tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    bitonic_sort,
+    bitonic_sort_stats,
+    comparison_sort_stats,
+    lsd_radix_sort,
+    radix_sort_stats,
+    xla_sort,
+)
+
+
+def _dist(rng, name, n, p):
+    hi = (1 << p) - 1
+    if name == "uniform":
+        k = rng.integers(0, hi + 1, n, dtype=np.uint64)
+    elif name == "all_equal":
+        k = np.full(n, min(1234, hi), np.uint64)
+    elif name == "two_values":
+        k = rng.choice([3, hi], n).astype(np.uint64)
+    elif name == "zipf":
+        k = np.minimum(rng.zipf(1.2, n).astype(np.uint64), hi)
+    elif name == "sorted":
+        k = np.sort(rng.integers(0, hi + 1, n, dtype=np.uint64))
+    else:  # reversed
+        k = np.sort(rng.integers(0, hi + 1, n, dtype=np.uint64))[::-1].copy()
+    return k
+
+
+DISTS = ["uniform", "all_equal", "two_values", "zipf", "sorted", "reversed"]
+
+
+@pytest.mark.parametrize("dist", DISTS)
+@pytest.mark.parametrize("p,radix_bits", [(8, 4), (16, 8), (32, 8), (32, 16)])
+def test_lsd_radix_matches_jnp_sort(rng, dist, p, radix_bits):
+    n = 2048
+    keys = _dist(rng, dist, n, p)
+    arr = jnp.asarray(keys.astype(np.uint32),
+                      jnp.uint32 if p == 32 else jnp.int32)
+    got = np.asarray(lsd_radix_sort(arr, p, radix_bits=radix_bits))
+    want = np.asarray(jnp.sort(arr))
+    np.testing.assert_array_equal(got, want, err_msg=f"{dist}/p{p}")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1500), st.sampled_from([8, 12, 16, 24]),
+       st.sampled_from([4, 8]))
+def test_lsd_radix_property(n, p, radix_bits):
+    rng = np.random.default_rng(n * 31 + p + radix_bits)
+    keys = rng.integers(0, 1 << p, n).astype(np.int32)
+    arr = jnp.asarray(keys)
+    got = np.asarray(lsd_radix_sort(arr, p, radix_bits=radix_bits))
+    np.testing.assert_array_equal(got, np.sort(keys))
+
+
+@pytest.mark.parametrize("dist", DISTS)
+@pytest.mark.parametrize("ascending", [True, False])
+def test_bitonic_matches_jnp_sort(rng, dist, ascending):
+    n, p = 1 << 10, 16
+    keys = _dist(rng, dist, n, p)
+    arr = jnp.asarray(keys.astype(np.int32))
+    got = np.asarray(bitonic_sort(arr, ascending=ascending))
+    want = np.sort(keys.astype(np.int64))
+    if not ascending:
+        want = want[::-1]
+    np.testing.assert_array_equal(got.astype(np.int64), want,
+                                  err_msg=f"{dist}/asc={ascending}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 11), st.booleans())
+def test_bitonic_property_power_of_two(log_n, ascending):
+    rng = np.random.default_rng(log_n * 7 + ascending)
+    n = 1 << log_n
+    keys = rng.integers(-(1 << 15), 1 << 15, n).astype(np.int32)
+    got = np.asarray(bitonic_sort(jnp.asarray(keys), ascending=ascending))
+    want = np.sort(keys)
+    np.testing.assert_array_equal(got, want if ascending else want[::-1])
+
+
+def test_bitonic_rejects_non_power_of_two(rng):
+    with pytest.raises(AssertionError):
+        bitonic_sort(jnp.asarray(rng.integers(0, 10, 100).astype(np.int32)))
+
+
+def test_xla_sort_is_the_oracle(rng):
+    keys = rng.integers(0, 1 << 16, 500).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(xla_sort(jnp.asarray(keys))),
+                                  np.sort(keys))
+
+
+def test_baseline_stats_models():
+    """Traffic models behind Fig. 10: radix pass count tracks radix_bits;
+    comparison/bitonic track n log n shape."""
+    st8 = radix_sort_stats(1 << 20, 32, radix_bits=8)
+    st16 = radix_sort_stats(1 << 20, 32, radix_bits=16)
+    assert st8.passes == 4 and st16.passes == 2
+    assert st8.bytes_total == 2 * st16.bytes_total
+    assert comparison_sort_stats(1 << 20, 32).passes == 20
+    b = bitonic_sort_stats(1 << 20, 32)
+    assert b.passes == 20 * 21 // 2
+    assert b.bytes_total > comparison_sort_stats(1 << 20, 32).bytes_total

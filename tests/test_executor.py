@@ -22,6 +22,7 @@ from repro.core import (
     fractal_rank_serial,
     fractal_sort,
     fractal_sort_batched,
+    fractal_sort_pairs,
     make_sort_plan,
 )
 
@@ -131,6 +132,83 @@ def test_distributed_backend_agrees_on_single_device_mesh(rng):
                                        max_bins_log2=w)).astype(np.uint64)
         np.testing.assert_array_equal(
             np.asarray(got).astype(np.uint64), want)
+
+
+# --- pairs (key–value) mode --------------------------------------------------
+
+
+def _dup_heavy(rng, dist, n, p):
+    """The join/group-by hot case: most keys equal."""
+    if dist == "all_equal":
+        k = np.full(n, min(77, (1 << p) - 1))
+    elif dist == "two_value":
+        k = rng.choice([7, (1 << p) - 1], n)
+    else:  # zipf
+        k = np.minimum(rng.zipf(1.2, n), (1 << p) - 1)
+    return k.astype(np.int32)
+
+
+@pytest.mark.parametrize("n,p", [(3000, 16), (2048, 32), (1, 8), (4097, 12)])
+def test_run_pairs_jnp_and_pallas_agree(rng, n, p):
+    """The payload must ride every pass — including the MSD reconstruct —
+    identically on both single-host backends."""
+    keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32)
+    arr = jnp.asarray(keys, jnp.uint32 if p == 32 else jnp.int32)
+    vals = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+    plan = make_sort_plan(n, p)
+    order = np.argsort(keys, kind="stable")
+    for backend in (JnpBackend(), PallasBackend(interpret=True)):
+        sk, sv = PlanExecutor(backend).run_pairs(arr, vals, plan)
+        np.testing.assert_array_equal(
+            np.asarray(sk).astype(np.uint32), keys[order], err_msg=str(backend))
+        np.testing.assert_array_equal(
+            np.asarray(sv), np.asarray(vals)[order], err_msg=str(backend))
+
+
+@pytest.mark.parametrize("dist", ["all_equal", "two_value", "zipf"])
+def test_pairs_stable_on_duplicates(rng, dist):
+    """Equal keys must keep arrival order in the payload — the property
+    every query operator (join ties, group segments) leans on."""
+    n, p = 4096, 16
+    keys = _dup_heavy(rng, dist, n, p)
+    sk, sv = fractal_sort_pairs(jnp.asarray(keys),
+                                jnp.arange(n, dtype=jnp.int32), p)
+    np.testing.assert_array_equal(np.asarray(sv),
+                                  np.argsort(keys, kind="stable"))
+    np.testing.assert_array_equal(np.asarray(sk), np.sort(keys))
+
+
+# --- argsort stability on duplicate-heavy inputs, all three backends ---------
+
+
+@pytest.mark.parametrize("dist", ["all_equal", "two_value", "zipf"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "distributed"])
+def test_argsort_duplicate_stability_across_backends(rng, dist, backend):
+    """Regression (satellite of the query subsystem): duplicates are the
+    join/group-by hot case, and only the jnp path was property-tested for
+    stability.  The permutation must equal numpy's stable argsort on
+    every backend."""
+    n, p = 2048, 16
+    keys = _dup_heavy(rng, dist, n, p)
+    want = np.argsort(keys, kind="stable")
+    if backend == "jnp":
+        perm = fractal_argsort(jnp.asarray(keys), p)
+    elif backend == "pallas":
+        plan = make_sort_plan(n, p)
+        perm = PlanExecutor(PallasBackend(interpret=True)).run_argsort(
+            jnp.asarray(keys), plan)
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.compat import make_mesh
+        from repro.core import distributed_fractal_argsort
+
+        mesh = make_mesh((1,), ("data",))
+        arr = jax.device_put(jnp.asarray(keys),
+                             NamedSharding(mesh, P("data")))
+        perm, ov = distributed_fractal_argsort(arr, mesh, "data", p)
+        assert not bool(ov)
+    np.testing.assert_array_equal(np.asarray(perm), want, err_msg=dist)
 
 
 # --- segment-aware grouped-trailing mode -------------------------------------

@@ -1,0 +1,386 @@
+"""Query subsystem: codecs round-trip and preserve order for every
+supported dtype; every operator matches a pure-XLA (``jnp.sort`` /
+``jnp.lexsort``) oracle on property-style inputs — multi-column asc/desc
+mixes, negative ints, NaN-free floats, duplicate-heavy join keys — and
+``order_by`` is stable."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic shim
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.query import (
+    BoolCodec,
+    ColumnSpec,
+    CompositeCodec,
+    Float32Codec,
+    Float64Codec,
+    IntCodec,
+    Table,
+    UIntCodec,
+    distinct,
+    group_by,
+    infer_codec,
+    order_by,
+    sort_merge_join,
+    sort_rowids,
+    top_k,
+    word_widths,
+)
+
+# --- codecs -------------------------------------------------------------------
+
+CODEC_CASES = {
+    "bool": (BoolCodec(), lambda rng, n: rng.random(n) < 0.5),
+    "int8": (IntCodec(8), lambda rng, n:
+             rng.integers(-128, 128, n).astype(np.int32)),
+    "int16": (IntCodec(16), lambda rng, n:
+              rng.integers(-(1 << 15), 1 << 15, n).astype(np.int32)),
+    "int32": (IntCodec(32), lambda rng, n:
+              rng.integers(-(1 << 31), 1 << 31, n, dtype=np.int64)
+              .astype(np.int32)),
+    "uint16": (UIntCodec(16), lambda rng, n:
+               rng.integers(0, 1 << 16, n).astype(np.uint32)),
+    "uint32": (UIntCodec(32), lambda rng, n:
+               rng.integers(0, 1 << 32, n, dtype=np.uint64)
+               .astype(np.uint32)),
+    "float32": (Float32Codec(), lambda rng, n:
+                np.concatenate([
+                    (rng.standard_normal(n - 6) * 10.0 ** rng.integers(
+                        -20, 20, n - 6)).astype(np.float32),
+                    np.asarray([0.0, -0.0, np.inf, -np.inf,
+                                np.float32(1e-45), np.float32(3.4e38)],
+                               np.float32)])),
+    "float64": (Float64Codec(), lambda rng, n:
+                np.concatenate([
+                    rng.standard_normal(n - 4) * 10.0 ** rng.integers(
+                        -200, 200, n - 4),
+                    np.asarray([0.0, -0.0, np.inf, -np.inf])])),
+}
+
+
+def _code_as_bigint(codec, words):
+    """Collapse the (n, W) uint32 words into arbitrary-precision ints so
+    numeric comparison of codes is exact for any width."""
+    w = np.asarray(words).astype(object)
+    out = np.zeros(w.shape[0], object)
+    for j, bits in enumerate(word_widths(codec.bits)):
+        out = (out * (1 << bits)) + w[:, j]
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_CASES))
+def test_codec_roundtrip(rng, name):
+    codec, gen = CODEC_CASES[name]
+    x = gen(rng, 512)
+    words = codec.encode(x)
+    assert words.shape == (512, codec.num_words)
+    assert np.asarray(words).dtype == np.uint32
+    back = np.asarray(codec.decode(words))
+    assert np.array_equal(back, np.asarray(x)), name
+    if back.dtype.kind == "f":  # ±0.0 must round-trip bitwise
+        assert np.array_equal(np.signbit(back), np.signbit(np.asarray(x)))
+
+
+@pytest.mark.parametrize("name", sorted(CODEC_CASES))
+def test_codec_preserves_order(rng, name):
+    codec, gen = CODEC_CASES[name]
+    x = gen(rng, 512)
+    code = _code_as_bigint(codec, codec.encode(x))
+    xs = np.asarray(x)
+    for _ in range(300):
+        i, j = rng.integers(0, len(xs), 2)
+        if xs[i] < xs[j]:
+            assert code[i] < code[j], (name, xs[i], xs[j])
+        elif xs[i] > xs[j]:
+            assert code[i] > code[j], (name, xs[i], xs[j])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-(1 << 31), (1 << 31) - 1), min_size=1,
+                max_size=200))
+def test_int_codec_property(vals):
+    x = np.asarray(vals, np.int32)
+    codec = IntCodec(32)
+    code = np.asarray(codec.encode(x))[:, 0]
+    assert np.array_equal(np.asarray(codec.decode(codec.encode(x))), x)
+    assert np.array_equal(np.argsort(code, kind="stable"),
+                          np.argsort(x, kind="stable"))
+
+
+def test_word_widths():
+    assert word_widths(1) == (1,)
+    assert word_widths(32) == (32,)
+    assert word_widths(33) == (32, 1)
+    assert word_widths(64) == (32, 32)
+    assert word_widths(65) == (32, 32, 1)
+    for codec, w in [(BoolCodec(), 1), (IntCodec(9), 1),
+                     (Float64Codec(), 2)]:
+        assert codec.num_words == w
+
+
+def test_composite_roundtrip_and_order(rng):
+    n = 400
+    a = rng.integers(-50, 50, n).astype(np.int32)
+    b = (rng.standard_normal(n)).astype(np.float32)
+    c = rng.random(n) < 0.5
+    codec = CompositeCodec([
+        ColumnSpec(IntCodec(8), ascending=True),
+        ColumnSpec(Float32Codec(), ascending=False),
+        ColumnSpec(BoolCodec(), ascending=True),
+    ])
+    assert codec.bits == 8 + 32 + 1
+    words = codec.encode([a, b, c])
+    assert words.shape == (n, 2)  # 41 bits -> two words
+    da, db, dc = codec.decode(words)
+    assert np.array_equal(np.asarray(da), a)
+    assert np.array_equal(np.asarray(db), b)
+    assert np.array_equal(np.asarray(dc), c)
+    # code order == (a asc, b desc, c asc) lexicographic order
+    code = _code_as_bigint(codec, words)
+    want = np.lexsort((c, -b, a))
+    got = np.argsort(code, kind="stable")
+    key = np.stack([a, -b, c], axis=1)
+    assert np.array_equal(key[got], key[want])
+
+
+# --- operators vs pure-XLA oracles --------------------------------------------
+
+
+def _mk_table(rng, n, key_space):
+    return Table({
+        "k": rng.integers(0, key_space, n).astype(np.int32),
+        "f": (rng.standard_normal(n) * 100).astype(np.float32),
+        "row": np.arange(n, dtype=np.int32),
+    })
+
+
+@pytest.mark.parametrize("dist", ["uniform", "duplicate_heavy", "all_equal"])
+def test_order_by_matches_lexsort_oracle(rng, dist):
+    n = 2048
+    space = {"uniform": 1 << 30, "duplicate_heavy": 7, "all_equal": 1}[dist]
+    t = _mk_table(rng, n, space)
+    k, f = np.asarray(t.column("k")), np.asarray(t.column("f"))
+    out = order_by(t, [("k", "asc"), ("f", "desc")]).to_numpy()
+    perm = np.asarray(jnp.lexsort((-t.column("f"), t.column("k"))))
+    assert np.array_equal(out["k"], k[perm])
+    assert np.array_equal(out["f"], f[perm])
+
+
+def test_order_by_is_stable(rng):
+    n = 3000
+    k = rng.integers(0, 5, n).astype(np.int32)  # heavy duplicates
+    t = Table({"k": k, "row": np.arange(n, dtype=np.int32)})
+    out = order_by(t, "k").to_numpy()
+    assert np.array_equal(out["row"], np.argsort(k, kind="stable"))
+    # descending must also keep arrival order within equal keys
+    out_d = order_by(t, [("k", "desc")]).to_numpy()
+    assert np.array_equal(out_d["row"],
+                          np.argsort(-k.astype(np.int64), kind="stable"))
+
+
+def test_order_by_negative_ints_and_floats(rng):
+    n = 1500
+    a = rng.integers(-(1 << 20), 1 << 20, n).astype(np.int32)
+    f = (rng.standard_normal(n) * 1e6).astype(np.float32)
+    t = Table({"a": a, "f": f})
+    out = order_by(t, ["a", "f"]).to_numpy()
+    perm = np.asarray(jnp.lexsort((t.column("f"), t.column("a"))))
+    assert np.array_equal(out["a"], a[perm])
+    assert np.array_equal(out["f"], f[perm])
+
+
+def test_order_by_float64_multiword(rng):
+    x = rng.standard_normal(700) * 1e12
+    t = Table({"x": x, "i": np.arange(700, dtype=np.int32)})
+    out = order_by(t, "x").to_numpy()
+    perm = np.argsort(x, kind="stable")
+    assert out["x"].dtype == np.float64
+    assert np.array_equal(out["x"], x[perm])
+    assert np.array_equal(out["i"], perm)
+
+
+def test_sort_rowids_multiword_matches_lexsort(rng):
+    n = 1200
+    words = jnp.asarray(
+        rng.integers(0, 1 << 32, (n, 3), dtype=np.uint64).astype(np.uint32))
+    sorted_words, rowids = sort_rowids(words, 96)
+    w = np.asarray(words)
+    perm = np.asarray(jnp.lexsort((words[:, 2], words[:, 1], words[:, 0])))
+    assert np.array_equal(np.asarray(rowids), perm)
+    assert np.array_equal(np.asarray(sorted_words), w[perm])
+
+
+@pytest.mark.parametrize("dist", ["uniform", "zipf", "all_equal"])
+def test_group_by_matches_segment_oracle(rng, dist):
+    n = 4000
+    if dist == "uniform":
+        g = rng.integers(0, 50, n)
+    elif dist == "zipf":
+        g = np.clip(rng.zipf(1.3, n) - 1, 0, 63)
+    else:
+        g = np.zeros(n)
+    g = g.astype(np.int32)
+    v = rng.integers(-1000, 1000, n).astype(np.int32)
+    t = Table({"g": g, "v": v})
+    out = group_by(t, "g", {"total": ("v", "sum"), "cnt": (None, "count"),
+                            "lo": ("v", "min"), "hi": ("v", "max")}).to_numpy()
+    uniq = np.unique(g)
+    assert np.array_equal(out["g"], uniq)
+    # pure-XLA oracle: sort by key, segment-reduce
+    order = jnp.argsort(t.column("g"))
+    gs = np.asarray(t.column("g")[order])
+    vs = t.column("v")[order]
+    seg = np.searchsorted(uniq, gs)
+    import jax
+    k = len(uniq)
+    assert np.array_equal(out["total"], np.asarray(
+        jax.ops.segment_sum(vs, jnp.asarray(seg), num_segments=k)))
+    assert np.array_equal(out["cnt"], np.asarray(
+        jax.ops.segment_sum(jnp.ones_like(vs), jnp.asarray(seg),
+                            num_segments=k)))
+    assert np.array_equal(out["lo"], np.asarray(
+        jax.ops.segment_min(vs, jnp.asarray(seg), num_segments=k)))
+    assert np.array_equal(out["hi"], np.asarray(
+        jax.ops.segment_max(vs, jnp.asarray(seg), num_segments=k)))
+
+
+def test_group_by_composite_key_with_float64(rng):
+    n = 2500
+    a = rng.integers(0, 4, n).astype(np.int32)
+    x = rng.standard_normal(n) * 1e6  # float64 key component (multi-word)
+    v = rng.integers(0, 100, n).astype(np.int32)
+    t = Table({"a": a, "x": x, "v": v})
+    out = group_by(t, ["a", "x"], {"s": ("v", "sum")}).to_numpy()
+    # oracle: python dict over exact key pairs
+    want = {}
+    for ai, xi, vi in zip(a, x, v):
+        want[(int(ai), float(xi))] = want.get((int(ai), float(xi)), 0) + vi
+    assert len(out["a"]) == len(want)
+    for ai, xi, si in zip(out["a"], out["x"], out["s"]):
+        assert want[(int(ai), float(xi))] == si
+
+
+@pytest.mark.parametrize("dup", ["unique_right", "dup_both"])
+def test_join_matches_oracle(rng, dup):
+    nl, nr = 1500, 400
+    if dup == "unique_right":
+        rk = rng.permutation(1 << 10)[:nr].astype(np.int32)
+    else:
+        rk = rng.integers(0, 64, nr).astype(np.int32)  # duplicate-heavy
+    lk = rng.integers(0, 1 << 10 if dup == "unique_right" else 64,
+                      nl).astype(np.int32)
+    left = Table({"k": lk, "lv": np.arange(nl, dtype=np.int32)})
+    right = Table({"k": rk, "rv": np.arange(nr, dtype=np.int32)})
+    out = sort_merge_join(left, right, "k").to_numpy()
+    # oracle: every (l, r) key match, sorted by (key, l arrival, r arrival)
+    want = sorted((int(k), lv, rv)
+                  for k, lv in zip(lk, range(nl))
+                  for k2, rv in zip(rk, range(nr)) if k == k2)
+    assert len(out["k"]) == len(want)
+    got = list(zip(out["k"].tolist(), out["lv"].tolist(),
+                   out["rv"].tolist()))
+    assert got == want
+
+
+def test_join_composite_key_and_payload_gather(rng):
+    n = 800
+    a = rng.integers(0, 8, n).astype(np.int32)
+    b = rng.integers(-4, 4, n).astype(np.int32)
+    left = Table({"a": a, "b": b, "amt": rng.integers(0, 100, n)
+                  .astype(np.int32)})
+    m = 300
+    a2 = rng.integers(0, 8, m).astype(np.int32)
+    b2 = rng.integers(-4, 4, m).astype(np.int32)
+    right = Table({"a": a2, "b": b2, "amt": rng.integers(0, 100, m)
+                   .astype(np.int32)})
+    out = sort_merge_join(left, right, ["a", "b"],
+                          codecs={"a": IntCodec(4), "b": IntCodec(4)}
+                          ).to_numpy()
+    want = sum(1 for i in range(n) for j in range(m)
+               if a[i] == a2[j] and b[i] == b2[j])
+    assert len(out["a"]) == want
+    # clashing non-key column gets suffixed on both sides
+    assert "amt_l" in out and "amt_r" in out
+    la = {(int(x), int(y)): [] for x, y in zip(a, b)}
+    for x, y, amt in zip(a, b, np.asarray(left.column("amt"))):
+        la[(int(x), int(y))].append(int(amt))
+    for x, y, amt in zip(out["a"], out["b"], out["amt_l"]):
+        assert int(amt) in la[(int(x), int(y))]
+
+
+def test_join_key_width_guard(rng):
+    t = Table({"x": rng.standard_normal(10)})  # float64: 64-bit code
+    with pytest.raises(AssertionError, match="32"):
+        sort_merge_join(t, t, "x")
+
+
+def test_join_rejects_mismatched_column_widths(rng):
+    """Same total bits on both sides but swapped per-column widths must be
+    rejected, not silently return an empty join."""
+    left = Table({"a": np.zeros(4, np.int8), "b": np.zeros(4, np.int16)})
+    right = Table({"a": np.zeros(4, np.int16), "b": np.zeros(4, np.int8)})
+    with pytest.raises(AssertionError, match="identically"):
+        sort_merge_join(left, right, ["a", "b"])
+
+
+def test_operator_outputs_compose(rng):
+    """Key columns decode back to their inferred dtype, so an operator's
+    output re-infers the same codec — group_by → join round trips."""
+    n = 600
+    u = rng.integers(0, 1 << 16, n).astype(np.uint16)
+    t = Table({"u": u, "v": rng.integers(0, 50, n).astype(np.int32)})
+    g = group_by(t, "u", {"s": ("v", "sum")})
+    assert np.dtype(g.column("u").dtype) == np.uint16
+    j = sort_merge_join(t, g, "u")  # same inferred codec on both sides
+    assert j.num_rows == n
+    i8 = rng.integers(-128, 128, n).astype(np.int8)
+    t8 = Table({"k": i8, "v": np.arange(n, dtype=np.int32)})
+    d = distinct(t8, "k")
+    assert np.dtype(d.column("k").dtype) == np.int8
+    assert sort_merge_join(t8, d, "k").num_rows == n
+
+
+def test_distinct_first_occurrence(rng):
+    n = 2000
+    k = rng.integers(0, 9, n).astype(np.int32)
+    t = Table({"k": k, "row": np.arange(n, dtype=np.int32)})
+    out = distinct(t, "k").to_numpy()
+    uniq = np.unique(k)
+    assert np.array_equal(out["k"], uniq)
+    firsts = np.asarray([np.flatnonzero(k == u)[0] for u in uniq])
+    assert np.array_equal(out["row"], firsts)  # DISTINCT ON: first arrival
+
+
+def test_top_k_matches_sorted_head(rng):
+    n = 1777
+    f = (rng.standard_normal(n) * 50).astype(np.float32)
+    t = Table({"f": f, "row": np.arange(n, dtype=np.int32)})
+    for k in (1, 10, n + 5):
+        out = top_k(t, [("f", "desc")], k).to_numpy()
+        want = np.asarray(-jnp.sort(-t.column("f")))[:k]
+        assert np.array_equal(out["f"], want)
+
+
+def test_operators_on_empty_table():
+    t = Table({"k": np.zeros(0, np.int32), "v": np.zeros(0, np.int32)})
+    assert order_by(t, "k").num_rows == 0
+    assert distinct(t, "k").num_rows == 0
+    g = group_by(t, "k", {"s": ("v", "sum"), "c": (None, "count")})
+    assert g.num_rows == 0
+    j = sort_merge_join(t, t, "k")
+    assert j.num_rows == 0
+
+
+def test_infer_codec_widths(rng):
+    assert infer_codec(np.zeros(3, np.int8)).bits == 8
+    assert infer_codec(np.zeros(3, np.int32)).bits == 32
+    assert infer_codec(np.zeros(3, np.float64)).bits == 64
+    assert infer_codec(jnp.zeros(3, jnp.float32)).bits == 32
+    assert infer_codec(np.zeros(3, np.int32), bits=9).bits == 9
+    with pytest.raises(AssertionError):
+        infer_codec(np.zeros(3, np.complex64))
