@@ -1,127 +1,204 @@
-"""SortPlan digit-width sweep: pick the default per-pass bin cap.
+"""SortPlan digit-width x rank-engine sweep: pick per-host plan defaults.
 
-For each digit width w the plan runs ceil(p / w)-ish passes of 2**w bins;
-rank work is O(n * 2**w * passes) while key traffic is O(n * passes) — the
-§III.G trade made tunable.  This sweep times :func:`fractal_sort` across
-``max_bins_log2`` and sizes, and prints the analytic per-plan traffic next
-to the measured wall-clock so the default (DEFAULT_MAX_BINS_LOG2) can be
-re-picked per host.
+For each digit width w the plan runs ceil(p / w)-ish passes of 2**w bins.
+Under the *one-hot* engine rank work is O(n * 2**w * passes); under the
+*scatter* engine it is O(n log tile * passes) — width-independent — while
+key traffic is O(n * passes) for both, so wide passes stop being
+compute-bound and the §III.G bandwidth trade actually bites.  This sweep
+times :func:`fractal_sort` across ``max_bins_log2`` x engine and prints
+the analytic per-plan traffic next to the measured wall-clock.
 
-Extra modes (``python -m benchmarks.bench_sortplan <mode>``):
+Modes (``python -m benchmarks.bench_sortplan <mode>``):
 
-* ``rank`` — serial-vs-parallel rank engine comparison: the same plan
-  executed with the chunk-parallel two-phase :func:`fractal_rank` vs the
-  serial-scan :func:`fractal_rank_serial`, at the rank level and end to
-  end.
-* ``smoke`` — the CI guard: one n=2**14 point under a hard wall-clock
-  bound, so pass-loop regressions (the PR-1 15.5 s variety) fail fast.
+* (default) — the engine x width sweep table.
+* ``tune`` — run :func:`~repro.core.autotune.autotune_plan` with
+  measurement forced over the standard shape buckets **and the query
+  layer's codec-driven widths** (9-bit ids, the 32-bit word of wide
+  composites), persisting the winners to the per-host cache every sort
+  entry point and query operator then resolves through.  This replaces
+  hand-picking ``DEFAULT_MAX_BINS_LOG2`` from the sweep table.
+* ``rank`` — rank-engine comparison on identical digit streams: the
+  chunk-parallel one-hot :func:`fractal_rank` vs the sorted-tile
+  :func:`fractal_rank_scatter` vs the serial-scan
+  :func:`fractal_rank_serial` oracle, plus end-to-end plan executions.
+* ``smoke`` — the CI guard: absolute-budget points for *both* engines at
+  n=2**14, then a relative check of the committed ``BENCH_sort.json``
+  per-engine points (>2x regression fails).
 """
 
 from __future__ import annotations
 
 import functools
+import json
 import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import rand_keys, row, time_fn
 from repro.core import (
     DEFAULT_MAX_BINS_LOG2,
     JnpBackend,
     PlanExecutor,
+    autotune_plan,
     fractal_rank,
+    fractal_rank_scatter,
     fractal_rank_serial,
     fractal_sort,
     fractal_sort_stats,
     make_sort_plan,
 )
+from repro.core.autotune import default_cache_path
+
+
+_keys = rand_keys
 
 
 def run(sizes=(1 << 12, 1 << 15), p: int = 32,
-        widths=(4, 5, 6, 8, 11)):
+        widths=(4, 5, 6, 8, 11, 16), engines=("onehot", "scatter")):
     rng = np.random.default_rng(0)
     best = {}
     for n in sizes:
-        keys = jnp.asarray(
-            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
-            jnp.uint32)
+        keys = _keys(rng, n, p)
         for w in widths:
-            plan = make_sort_plan(n, p, max_bins_log2=w)
-            st = fractal_sort_stats(n, p, plan=plan)
-            t = time_fn(functools.partial(fractal_sort, p=p,
-                                          max_bins_log2=w), keys)
-            row(f"sortplan/n{n}/p{p}/w{w}", t,
-                f"plan={plan.describe()} passes={st.passes} "
-                f"bytes_per_key={st.bytes_per_key:.1f} "
-                f"keys_per_s={n / t:.3g}")
-            if t < best.get(n, (np.inf, None))[0]:
-                best[n] = (t, w)
-    for n, (t, w) in best.items():
-        marker = "=default" if w == DEFAULT_MAX_BINS_LOG2 else \
-            f"(default w={DEFAULT_MAX_BINS_LOG2})"
-        row(f"sortplan/best/n{n}", t, f"w={w} {marker}")
+            for engine in engines:
+                if engine == "onehot" and w > 11:
+                    continue  # O(n * 2**16) tile: the PR-1 pathology
+                plan = make_sort_plan(n, p, max_bins_log2=w, engine=engine)
+                st = fractal_sort_stats(n, p, plan=plan)
+                t = time_fn(functools.partial(fractal_sort, p=p, plan=plan),
+                            keys)
+                row(f"sortplan/n{n}/p{p}/w{w}/{engine}", t,
+                    f"plan={plan.describe()} passes={st.passes} "
+                    f"bytes_per_key={st.bytes_per_key:.1f} "
+                    f"keys_per_s={n / t:.3g}")
+                if t < best.get(n, (np.inf, None, None))[0]:
+                    best[n] = (t, w, engine)
+    for n, (t, w, engine) in best.items():
+        marker = "=static-default" if (
+            w == DEFAULT_MAX_BINS_LOG2 and engine == "onehot") else \
+            f"(static default w={DEFAULT_MAX_BINS_LOG2}/onehot)"
+        row(f"sortplan/best/n{n}", t, f"w={w}/{engine} {marker}")
     return best
 
 
-def run_rank_compare(sizes=(1 << 12, 1 << 15), p: int = 32,
-                     bins_log2=(4, 8)):
-    """Serial-scan vs chunk-parallel rank engine, same inputs/plans.
+# The shape points `tune` measures and persists: the BENCH_sort.json sort
+# points, the wide acceptance point, and the query layer's codec-driven
+# key widths (9-bit dictionary ids; 16-bit and full-word columns).
+TUNE_POINTS = (
+    (1 << 12, 16), (1 << 15, 32), (1 << 17, 32),
+    (1 << 15, 9), (1 << 15, 16),
+)
 
-    Reports both the isolated rank stage (one digit stream) and the full
-    plan execution (the n=2**15, p=32 acceptance point of the executor
-    refactor).  Returns {n: parallel_sort_speedup}.
-    """
+
+def tune(points=TUNE_POINTS, force: bool = True):
+    """Measure the engine x width grid once per point and persist the
+    winners (the cache every entry point resolves through)."""
+    print(f"autotune cache: {default_cache_path()}")
+    for n, p in points:
+        plan = autotune_plan(n, p, force=force)
+        engines = sorted({dp.engine or "auto" for dp in plan.passes})
+        row(f"sortplan/tuned/n{n}/p{p}", 0.0,
+            f"plan={plan.describe()} engine={'+'.join(engines)}")
+    return None
+
+
+def run_rank_compare(sizes=(1 << 12, 1 << 15), p: int = 32,
+                     bins_log2=(4, 8, 11)):
+    """One-hot vs scatter vs serial rank engines, same digit streams and
+    plans.  Reports the isolated rank stage and full plan executions.
+    Returns {n: scatter_vs_onehot_sort_speedup} at w=8."""
     rng = np.random.default_rng(0)
     speedups = {}
+    engines = (("onehot", fractal_rank), ("scatter", fractal_rank_scatter),
+               ("serial", fractal_rank_serial))
     for n in sizes:
         for w in bins_log2:
             d = jnp.asarray(rng.integers(0, 1 << w, n).astype(np.int32))
-            tp = time_fn(jax.jit(functools.partial(
-                fractal_rank, n_bins=1 << w)), d)
-            ts = time_fn(jax.jit(functools.partial(
-                fractal_rank_serial, n_bins=1 << w)), d)
-            row(f"rankmode/parallel/n{n}/bins{1 << w}", tp,
-                f"keys_per_s={n / tp:.3g}")
-            row(f"rankmode/serial/n{n}/bins{1 << w}", ts,
-                f"speedup={ts / tp:.2f}x")
-        keys = jnp.asarray(
-            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
-            jnp.uint32)
-        plan = make_sort_plan(n, p)
-        par = jax.jit(lambda k: PlanExecutor(JnpBackend()).run(k, plan))
-        ser = jax.jit(lambda k: PlanExecutor(
-            JnpBackend(rank_fn=fractal_rank_serial)).run(k, plan))
-        tp, ts = time_fn(par, keys), time_fn(ser, keys)
-        row(f"rankmode/sort_parallel/n{n}/p{p}", tp,
-            f"plan={plan.describe()}")
-        row(f"rankmode/sort_serial/n{n}/p{p}", ts,
-            f"parallel_speedup={ts / tp:.2f}x")
-        speedups[n] = ts / tp
+            ts = {}
+            for name, fn in engines:
+                ts[name] = time_fn(jax.jit(functools.partial(
+                    fn, n_bins=1 << w)), d)
+                row(f"rankmode/{name}/n{n}/bins{1 << w}", ts[name],
+                    f"keys_per_s={n / ts[name]:.3g}")
+            row(f"rankmode/scatter_speedup/n{n}/bins{1 << w}",
+                ts["scatter"], f"vs_onehot={ts['onehot'] / ts['scatter']:.2f}x"
+                f" vs_serial={ts['serial'] / ts['scatter']:.2f}x")
+        keys = _keys(rng, n, p)
+        plan_oh = make_sort_plan(n, p, max_bins_log2=8, engine="onehot")
+        plan_sc = make_sort_plan(n, p, max_bins_log2=8, engine="scatter")
+        t_oh = time_fn(jax.jit(
+            lambda k: PlanExecutor(JnpBackend()).run(k, plan_oh)), keys)
+        t_sc = time_fn(jax.jit(
+            lambda k: PlanExecutor(JnpBackend()).run(k, plan_sc)), keys)
+        row(f"rankmode/sort_onehot_w8/n{n}/p{p}", t_oh,
+            f"plan={plan_oh.describe()}")
+        row(f"rankmode/sort_scatter_w8/n{n}/p{p}", t_sc,
+            f"scatter_speedup={t_oh / t_sc:.2f}x")
+        speedups[n] = t_oh / t_sc
     return speedups
 
 
-# Hard wall for the CI smoke point (n=2**14, p=32, default plan).  The
-# healthy time on a 2-core runner is ~10 ms; the PR-1 regression this
-# guards against was 15.5 s — three orders of magnitude of headroom
-# without flaking on slow shared runners.
+# Hard wall for the CI smoke points (n=2**14, p=32, one per engine).  The
+# healthy times on a 2-core runner are ~10 ms (w=4 one-hot) and ~15 ms
+# (w=8 scatter); the PR-1 regression this guards against was 15.5 s —
+# orders of magnitude of headroom without flaking on slow shared runners.
 SMOKE_BUDGET_S = 2.0
 
+# Relative guard: a committed per-engine BENCH_sort.json point re-timed
+# slower than max(2x its committed wall, the floor) fails CI.  The floor
+# absorbs host-speed skew between the recording machine and CI runners —
+# the guard exists to catch engine-path regressions (the O(n * 2**w)
+# variety), which blow past 2x by construction, not 1.3x noise.
+SMOKE_REGRESSION_FACTOR = 2.0
+SMOKE_REGRESSION_FLOOR_S = 0.5
 
-def smoke(n: int = 1 << 14, p: int = 32) -> float:
-    """One benchmark point under a hard budget (CI pass-loop guard)."""
+
+def _baseline_points(path: str):
+    """Committed per-engine guard points: (n, p, plan, engine, wall_s)."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return []
+    return [pt for pt in rec.get("points", [])
+            if pt.get("smoke_guard") and pt.get("engine")]
+
+
+def smoke(n: int = 1 << 14, p: int = 32,
+          baseline_path: str = "BENCH_sort.json") -> float:
+    """Both engines under a hard budget + the committed-baseline relative
+    guard (CI pass-loop / engine-path regression gate)."""
     rng = np.random.default_rng(0)
-    keys = jnp.asarray(
-        rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
-        jnp.uint32)
-    t = time_fn(functools.partial(fractal_sort, p=p), keys)
-    row(f"sortplan/smoke/n{n}/p{p}", t, f"budget_s={SMOKE_BUDGET_S}")
-    if t > SMOKE_BUDGET_S:
-        raise SystemExit(
-            f"sortplan smoke point took {t:.2f}s > {SMOKE_BUDGET_S}s "
-            f"budget: a pass-loop/rank regression landed")
-    return t
+    keys = _keys(rng, n, p)
+    worst = 0.0
+    for engine, w in (("onehot", 4), ("scatter", 8)):
+        plan = make_sort_plan(n, p, max_bins_log2=w, engine=engine)
+        t = time_fn(functools.partial(fractal_sort, p=p, plan=plan), keys)
+        row(f"sortplan/smoke/n{n}/p{p}/{engine}", t,
+            f"budget_s={SMOKE_BUDGET_S}")
+        worst = max(worst, t)
+        if t > SMOKE_BUDGET_S:
+            raise SystemExit(
+                f"sortplan smoke point ({engine}) took {t:.2f}s > "
+                f"{SMOKE_BUDGET_S}s budget: a pass-loop/rank regression "
+                "landed")
+    for pt in _baseline_points(baseline_path):
+        bn, bp, w = pt["n"], pt["p"], pt["max_bins_log2"]
+        plan = make_sort_plan(bn, bp, max_bins_log2=w, engine=pt["engine"])
+        t = time_fn(functools.partial(fractal_sort, p=bp, plan=plan),
+                    _keys(np.random.default_rng(0), bn, bp))
+        limit = max(SMOKE_REGRESSION_FACTOR * pt["wall_s"],
+                    SMOKE_REGRESSION_FLOOR_S)
+        row(f"sortplan/guard/n{bn}/p{bp}/{pt['engine']}", t,
+            f"baseline_s={pt['wall_s']:.4f} limit_s={limit:.4f}")
+        if t > limit:
+            raise SystemExit(
+                f"committed baseline point n={bn} p={bp} "
+                f"engine={pt['engine']} regressed: {t:.3f}s vs "
+                f"{pt['wall_s']:.3f}s committed (limit {limit:.3f}s)")
+    return worst
 
 
 if __name__ == "__main__":
@@ -130,5 +207,7 @@ if __name__ == "__main__":
         run_rank_compare()
     elif mode == "smoke":
         smoke()
+    elif mode == "tune":
+        tune()
     else:
         run()

@@ -25,3 +25,15 @@ def time_fn(fn, *args, warmup: int = 2, repeat: int = 5) -> float:
 def row(name: str, seconds: float, derived: str = ""):
     """One CSV row: name,us_per_call,derived."""
     print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def rand_keys(rng, n: int, p: int):
+    """Uniform p-bit benchmark keys in the sort entry points' dtype
+    convention (uint32 for p=32, int32 below — mirrors
+    `repro.core.autotune._measure_plan` so tuner measurements and
+    benchmark points see the same distribution)."""
+    import jax.numpy as jnp
+
+    return jnp.asarray(
+        rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+        jnp.uint32 if p == 32 else jnp.int32)

@@ -24,15 +24,32 @@ import json
 import subprocess
 import sys
 
-# The points every PR's BENCH_sort.json records (n, p); small enough to
-# run in seconds, big enough that a pass-loop regression is visible.
-SORT_JSON_POINTS = ((1 << 12, 16), (1 << 15, 32))
+# The points every PR's BENCH_sort.json records: (n, p, max_bins_log2,
+# engine, smoke_guard).  max_bins_log2/engine None = the entry point's
+# default resolution (tuned plan when the host cache has one).  The
+# per-engine points pin their plan exactly — they are the engine
+# trajectory across PRs, and the ``smoke_guard`` ones double as the CI
+# relative-regression baselines (bench_sortplan smoke re-times them and
+# fails on >2x).  The n=2**17 trio records the wide-pass acceptance
+# story: w=8/16 scatter vs the old w=4 one-hot default.
+SORT_JSON_POINTS = (
+    (1 << 12, 16, None, None, False),
+    (1 << 15, 32, None, None, False),
+    (1 << 15, 32, 4, "onehot", True),
+    (1 << 15, 32, 8, "scatter", True),
+    (1 << 17, 32, 4, "onehot", False),
+    (1 << 17, 32, 8, "scatter", False),
+    (1 << 17, 32, 16, "scatter", False),
+)
 
 # Record schema history (the cross-PR reader keys on this):
 #   1 — {points: [{n, p, plan, ...}]}
 #   2 — + provenance {git_sha, git_dirty, date, jax} and query operator
 #       points
-SORT_JSON_SCHEMA = 2
+#   3 — points carry max_bins_log2/engine/smoke_guard (per-engine
+#       trajectory + CI guard baselines); default points record the
+#       resolved engine hints
+SORT_JSON_SCHEMA = 3
 
 
 def _provenance() -> dict:
@@ -63,27 +80,33 @@ def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
     operators) and write the machine-readable perf record (wall time +
     the analytic traffic model behind the paper's b_eff figure)."""
     import numpy as np
-    import jax.numpy as jnp
 
     from benchmarks.bench_bandwidth import b_eff
     from benchmarks.bench_query import query_points
-    from benchmarks.common import time_fn
+    from benchmarks.common import rand_keys, time_fn
     from repro.core import fractal_sort, fractal_sort_stats, make_sort_plan
+    from repro.core.autotune import tuned_plan
 
     rng = np.random.default_rng(0)
     results = []
-    for n, p in SORT_JSON_POINTS:
-        keys = jnp.asarray(
-            rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
-            jnp.uint32 if p == 32 else jnp.int32)
-        wall_s = time_fn(functools.partial(fractal_sort, p=p), keys)
-        plan = make_sort_plan(n, p)
+    for n, p, w, engine, guard in SORT_JSON_POINTS:
+        keys = rand_keys(rng, n, p)
+        if w is None:
+            plan = tuned_plan(n, p)  # the entry points' default resolution
+        else:
+            plan = make_sort_plan(n, p, max_bins_log2=w, engine=engine)
+        wall_s = time_fn(functools.partial(fractal_sort, p=p, plan=plan),
+                         keys)
         st = fractal_sort_stats(n, p, plan=plan)
+        engines = sorted({dp.engine or "auto" for dp in plan.passes})
         results.append({
             "n": n,
             "p": p,
             "plan": plan.describe(),
             "passes": st.passes,
+            "max_bins_log2": w,
+            "engine": engine or "+".join(engines),
+            "smoke_guard": guard,
             "wall_s": wall_s,
             "keys_per_s": n / wall_s,
             "analytic_bytes_per_key": st.bytes_per_key,

@@ -19,7 +19,11 @@ from repro.core.sort_plan import (
     DigitPass,
     SortPlan,
     make_sort_plan,
+    pass_cost,
+    pick_engine,
+    plan_cost,
     rank_chunk_len,
+    scatter_tile_len,
 )
 from repro.core.executor import (
     DistributedBackend,
@@ -33,12 +37,18 @@ from repro.core.fractal_sort import (
     SortStats,
     fractal_argsort,
     fractal_rank,
+    fractal_rank_scatter,
     fractal_rank_serial,
     fractal_sort,
     fractal_sort_batched,
     fractal_sort_pairs,
     fractal_sort_stats,
+    rank_engine,
     reconstruct,
+)
+from repro.core.autotune import (
+    autotune_plan,
+    tuned_plan,
 )
 from repro.core.baselines import (
     bitonic_sort,

@@ -1,0 +1,247 @@
+"""Measured plan autotuning: pick (digit width x rank engine) per host.
+
+The SortPlan decomposition (§III.G) and the per-pass rank engines give a
+two-axis execution space: *width* trades passes against per-pass bin
+count, *engine* trades one-hot tile arithmetic against sorted-tile
+scatter arithmetic.  The analytic cost model
+(:func:`~repro.core.sort_plan.plan_cost`) ranks the space a priori, but
+the real crossover moves with the host (LLC size, XLA sort throughput,
+core count) and the backend (the one-hot tile is the MXU-native shape on
+TPU, a liability on CPU) — so :func:`autotune_plan` *measures* the grid
+once per (host, backend, key width, shape bucket) and caches the winner:
+
+* **shape bucket** — ``ceil(log2 n)``: one measurement covers every n in
+  the bucket (plan choice is scale-sensitive, not exact-n-sensitive);
+  measurement arrays are capped at 2**18 keys so tuning a huge-n bucket
+  stays a one-off few-second cost.
+* **persistence** — a JSON file (``REPRO_AUTOTUNE_CACHE`` env var, else
+  ``~/.cache/repro-fractalsort/autotune.json``), keyed by
+  ``host|backend|p|l_n|bucket``.  A cache hit never re-measures; delete
+  the file (or pass ``force=True``) to re-sweep after a hardware or
+  toolchain change.
+* **zero-cost default** — :func:`tuned_plan` is the cache-consult-only
+  resolution every sort entry point and query operator uses: cached
+  winner if one exists, otherwise the static
+  ``DEFAULT_MAX_BINS_LOG2`` plan.  Nothing measures implicitly; the
+  sweep runs when `autotune_plan` is called with measurement enabled —
+  ``python -m benchmarks.bench_sortplan tune`` populates the standard
+  points.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import platform
+import time
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.sort_plan import (
+    DEFAULT_MAX_BINS_LOG2,
+    SortPlan,
+    make_sort_plan,
+)
+
+__all__ = [
+    "autotune_plan",
+    "candidate_grid",
+    "cache_key",
+    "default_cache_path",
+    "tuned_plan",
+]
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+#: Measurement arrays are capped at this many keys: big enough that the
+#: engine crossover is the asymptotic one, small enough that a full grid
+#: sweep is seconds, not minutes.
+MEASURE_CAP_LOG2 = 18
+
+#: Plans measured per grid point (median of this many timed runs after
+#: warmup; warmup also pays the jit trace).
+_MEASURE_REPEAT = 3
+
+#: Widest digit the sweep pairs with the one-hot engine.  Past this the
+#: point is a known pathology (O(n * 2**w) tile — the PR-1 15.5 s
+#: variety), never a winner: the cost-model crossover sits near w=5-6,
+#: so w=8 already carries generous margin, and measuring one-hot w=16 at
+#: the 2**18 cap would alone take minutes.
+_ONEHOT_WIDTH_CAP = 8
+
+# in-process caches: parsed cache files by path, resolved entries by
+# (path, key) — the disk is read at most once per path per process.
+_FILE_CACHE: dict = {}
+_MEM_CACHE: dict = {}
+
+
+def default_cache_path() -> str:
+    return os.environ.get(CACHE_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro-fractalsort",
+        "autotune.json")
+
+
+def host_key() -> str:
+    """Identity of the measuring host (the cache is per-machine: plan
+    winners move with LLC size and core count)."""
+    return f"{platform.node() or 'unknown-host'}-cpu{os.cpu_count()}"
+
+
+def shape_bucket(n: int) -> int:
+    """ceil(log2 n): one tuning point covers the whole power-of-two
+    bucket."""
+    return max(1, int(np.ceil(np.log2(max(n, 2)))))
+
+
+def cache_key(backend: str, p: int, l_n: Optional[int], bucket: int) -> str:
+    return f"{host_key()}|{backend}|p{p}|l{l_n or 0}|n2^{bucket}"
+
+
+def candidate_grid(p: int,
+                   widths: Optional[Sequence[int]] = None,
+                   engines: Optional[Sequence[str]] = None,
+                   ) -> Tuple[Tuple[int, str], ...]:
+    """The (width, engine) points a sweep measures: the static default,
+    the wide-pass candidates the scatter engine unlocks, and the paper's
+    16-bit field when the key is wide enough."""
+    if widths is None:
+        widths = sorted({DEFAULT_MAX_BINS_LOG2, 6, 8, 11, min(16, p)})
+    widths = [w for w in widths if 1 <= w <= min(16, p)]
+    assert widths, f"no candidate widths for p={p}"
+    if engines is None:
+        engines = ("onehot", "scatter")
+    return tuple((w, e) for w in widths for e in engines
+                 if not (e == "onehot" and w > _ONEHOT_WIDTH_CAP))
+
+
+def _load(path: str) -> dict:
+    if path not in _FILE_CACHE:
+        try:
+            with open(path) as f:
+                _FILE_CACHE[path] = json.load(f)
+        except (OSError, ValueError):
+            _FILE_CACHE[path] = {}
+    return _FILE_CACHE[path]
+
+
+def _store(path: str, data: dict) -> None:
+    _FILE_CACHE[path] = data
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+    except OSError:
+        pass  # best-effort: an unwritable cache degrades to per-process
+
+
+def _measure_plan(n: int, p: int, plan: SortPlan, backend: str,
+                  repeat: int = _MEASURE_REPEAT) -> float:
+    """Median wall seconds of one full plan execution on ``backend``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.executor import JnpBackend, PallasBackend, PlanExecutor
+
+    if backend == "jnp":
+        ex = PlanExecutor(JnpBackend())
+    elif backend == "pallas":
+        ex = PlanExecutor(PallasBackend())
+    else:
+        raise ValueError(f"autotune backend {backend!r}: 'jnp' or 'pallas' "
+                         "(tune distributed plans via max_bins_log2 — the "
+                         "collective, not the rank engine, dominates there)")
+    rng = np.random.default_rng(0)
+    # same distribution + dtype convention as benchmarks/common.rand_keys
+    # (kept inline: src must not import the benchmarks package)
+    keys = jnp.asarray(
+        rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32),
+        jnp.uint32 if p == 32 else jnp.int32)
+    fn = jax.jit(lambda k: ex.run(k, plan))
+    jax.block_until_ready(fn(keys))  # trace + compile outside the clock
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(keys))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def autotune_plan(n: int, p: int, backend: str = "jnp",
+                  l_n: Optional[int] = None,
+                  widths: Optional[Sequence[int]] = None,
+                  engines: Optional[Sequence[str]] = None,
+                  cache_path: Optional[str] = None,
+                  measure: bool = True,
+                  force: bool = False) -> SortPlan:
+    """The fastest measured plan for an ``n``-key ``p``-bit sort.
+
+    Consults the persisted per-host cache first — a hit returns the
+    recorded (width, engine) winner instantly, re-instantiated for the
+    exact ``n``.  On a miss, measures every :func:`candidate_grid` point
+    at the shape bucket's size (capped at 2**18 keys), records the winner
+    (with the full sweep attached for provenance), persists, and returns
+    it.  ``measure=False`` turns the miss into the static default plan —
+    the never-measures resolution :func:`tuned_plan` wraps.  ``force``
+    re-measures through an existing entry (toolchain changed).
+
+    A cached winner only satisfies a call whose (``widths``, ``engines``)
+    grid contains it — an explicitly restricted grid whose constraint the
+    recorded winner violates re-sweeps (and re-records: the cache always
+    holds the most recent sweep's winner for the key).
+    """
+    path = cache_path or default_cache_path()
+    bucket = shape_bucket(n)
+    key = cache_key(backend, p, l_n, bucket)
+    grid = candidate_grid(p, widths, engines)
+    unrestricted = widths is None and engines is None
+    entry = None if force else _MEM_CACHE.get((path, key)) \
+        or _load(path).get(key)
+    if entry is not None and (
+            unrestricted
+            or (entry["max_bins_log2"], entry["engine"]) in grid):
+        return make_sort_plan(n, p, l_n=l_n,
+                              max_bins_log2=entry["max_bins_log2"],
+                              engine=entry["engine"])
+    if not measure:
+        return make_sort_plan(n, p, l_n=l_n)
+    n_meas = 1 << min(bucket, MEASURE_CAP_LOG2)
+    sweep = []
+    for w, engine in grid:
+        plan = make_sort_plan(n_meas, p, l_n=l_n, max_bins_log2=w,
+                              engine=engine)
+        wall = _measure_plan(n_meas, p, plan, backend)
+        sweep.append({"max_bins_log2": w, "engine": engine,
+                      "wall_s": wall, "plan": plan.describe()})
+    best = min(sweep, key=lambda s: s["wall_s"])
+    entry = {
+        "max_bins_log2": best["max_bins_log2"],
+        "engine": best["engine"],
+        "wall_s": best["wall_s"],
+        "n_measured": n_meas,
+        "sweep": sweep,
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    data = dict(_load(path))
+    data[key] = entry
+    _MEM_CACHE[(path, key)] = entry
+    _store(path, data)
+    return make_sort_plan(n, p, l_n=l_n,
+                          max_bins_log2=entry["max_bins_log2"],
+                          engine=entry["engine"])
+
+
+def tuned_plan(n: int, p: int, backend: str = "jnp",
+               l_n: Optional[int] = None,
+               cache_path: Optional[str] = None) -> SortPlan:
+    """Cache-consult-only plan resolution (never measures): the recorded
+    per-host winner when one exists, the static default otherwise.  This
+    is what every sort entry point and query operator defaults to — free
+    at trace time, and exactly the old behavior until a sweep has run."""
+    return autotune_plan(n, p, backend=backend, l_n=l_n,
+                         cache_path=cache_path, measure=False)

@@ -48,8 +48,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.executor import DistributedBackend, PlanExecutor
-from repro.core.fractal_sort import fractal_rank
-from repro.core.sort_plan import make_sort_plan
+from repro.core.fractal_sort import fractal_rank, rank_engine
+from repro.core.sort_plan import make_sort_plan, pick_engine, scatter_tile_len
 
 __all__ = [
     "distributed_fractal_sort",
@@ -61,13 +61,17 @@ __all__ = [
 
 def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
                       capacity: int, batch: int, taper_wire: bool,
-                      payloads: tuple = ()):
+                      payloads: tuple = (), engine: Optional[str] = None):
     """One stable distributed counting pass on key bits [shift, shift+bits).
 
     ``u`` is this device's uint32 key shard; returns the re-shuffled shard
     ``(u, *payloads)`` (keys placed at their exact global rank for this
     field, payload arrays routed through the same all_to_all buckets) +
-    overflow flag.
+    overflow flag.  ``engine`` picks the *local* rank engine for the
+    pass's field (the wide-pass ICI scheme — ``max_bins_log2=16``, one
+    all_to_all per 16-bit field — needs the scatter engine locally or the
+    2**16-bin one-hot tile dominates the collective); ``None`` defers to
+    the cost model.
     """
     n_local = u.shape[0]
     D = jax.lax.psum(1, axis)
@@ -89,8 +93,13 @@ def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
     global_start = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(global_counts)[:-1]])
 
-    # local stable intra-bin arrival ranks.
-    rank_local, _, _ = fractal_rank(field, n_bins, batch=batch)
+    # local stable intra-bin arrival ranks (engine per the pass hint /
+    # cost model — wide fields rank via the scatter engine).
+    if engine is None:
+        engine = pick_engine(n_local, bits)
+    rank_batch = scatter_tile_len(n_bins, batch) if engine == "scatter" \
+        else batch
+    rank_local, _, _ = rank_engine(engine)(field, n_bins, batch=rank_batch)
     local_start = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(local_counts)[:-1]])
     intra = rank_local - local_start[field]

@@ -97,14 +97,23 @@ class PassBackend:
     #: knob reaches the rank engine.
     rank_base: int = 1024
 
+    def begin_run(self) -> None:
+        """Reset per-run backend state.  Called by the executor at the
+        start of every ``run*`` — backends accumulating flags across
+        passes (the distributed overflow bit) reset them here so a reused
+        executor never leaks one run's state into the next."""
+
     def rank(self, digit: jnp.ndarray, n_bins: int, *,
              batch_hint: Optional[int] = None,
              carry_in: Optional[jnp.ndarray] = None,
-             bin_start: Optional[jnp.ndarray] = None):
+             bin_start: Optional[jnp.ndarray] = None,
+             engine: Optional[str] = None):
         """Stable output slot per key for one digit stream.
 
         Returns ``(rank, counts, carry_out)`` — the streaming-carry
         contract of :func:`~repro.core.fractal_sort.fractal_rank`.
+        ``engine`` is the pass's rank-engine hint ("onehot"/"scatter");
+        ``None`` lets the backend pick (cost model or its native tile).
         """
         raise NotImplementedError
 
@@ -124,7 +133,8 @@ class PassBackend:
         Backends that fuse rank + placement (distributed) override this so
         payloads ride the same routing as the keys."""
         rank, _, _ = self.rank(_digit_of(u, dp), dp.n_bins,
-                               batch_hint=dp.rank_batch(self.rank_base))
+                               batch_hint=dp.rank_batch(self.rank_base),
+                               engine=dp.engine)
         return self.scatter(rank, u, *payloads)
 
     def reconstruct(self, counts: jnp.ndarray, trailing: jnp.ndarray,
@@ -135,10 +145,15 @@ class PassBackend:
 
 
 class JnpBackend(PassBackend):
-    """Pure-jnp primitives (chunk-parallel two-phase rank, jnp scatter).
+    """Pure-jnp primitives (chunk-parallel one-hot rank, sorted-tile
+    scatter rank, jnp scatter).
 
-    ``rank_fn`` swaps the rank engine — used by benchmarks to compare the
-    chunk-parallel rank against the serial-scan oracle on identical plans.
+    Engine selection: an explicit per-pass hint (``DigitPass.engine``)
+    wins; without one the analytic cost model
+    (:func:`~repro.core.sort_plan.pick_engine`) picks — narrow digits run
+    the one-hot tile, wide digits the scatter engine.  ``rank_fn`` pins
+    one rank function outright (benchmarks comparing engines on identical
+    plans); it overrides both the hint and the model.
     """
 
     def __init__(self, batch: int = 1024, rank_fn=None):
@@ -147,11 +162,23 @@ class JnpBackend(PassBackend):
         self.rank_fn = rank_fn
 
     def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
-             bin_start=None):
-        from repro.core.fractal_sort import fractal_rank
+             bin_start=None, engine=None):
+        from repro.core.fractal_sort import rank_engine
+        from repro.core.sort_plan import pick_engine, scatter_tile_len
 
-        fn = self.rank_fn if self.rank_fn is not None else fractal_rank
-        batch = self.batch if batch_hint is None else batch_hint
+        if self.rank_fn is not None:
+            fn = self.rank_fn
+            batch = self.batch if batch_hint is None else batch_hint
+        else:
+            if engine is None:
+                bits = max(n_bins - 1, 1).bit_length()
+                engine = pick_engine(digit.shape[0], bits)
+                # a hint computed for the other engine's tile shape must
+                # not leak in: re-derive it for the picked engine.
+                if engine == "scatter":
+                    batch_hint = scatter_tile_len(n_bins, self.batch)
+            fn = rank_engine(engine)
+            batch = self.batch if batch_hint is None else batch_hint
         return fn(digit, n_bins, batch=batch, carry_in=carry_in,
                   bin_start=bin_start)
 
@@ -176,7 +203,7 @@ class PallasBackend(PassBackend):
         self.interpret = interpret
 
     def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
-             bin_start=None):
+             bin_start=None, engine=None):
         if carry_in is not None:
             raise NotImplementedError(
                 "streaming carry is a JnpBackend mode; the rank kernel "
@@ -185,7 +212,7 @@ class PallasBackend(PassBackend):
 
         return fractal_rank_counts(digit, n_bins, block=self.block,
                                    interpret=self.interpret,
-                                   bin_start=bin_start)
+                                   bin_start=bin_start, engine=engine)
 
     def reconstruct(self, counts, trailing, plan):
         from repro.kernels.fractal_reconstruct import fractal_reconstruct_plan
@@ -203,7 +230,9 @@ class DistributedBackend(PassBackend):
     cross-device carry, then all_to_all routing), so there is nothing to
     reconstruct — the MSD digit runs as one more exact pass
     (``reconstructs = False``).  Bucket-overflow flags accumulate across
-    passes on the backend; read :attr:`overflow` after the run.
+    passes *within one run* (:meth:`begin_run` resets them, so a reused
+    executor never reports a previous run's overflow); read
+    :attr:`overflow` after the run.
     """
 
     reconstructs = False
@@ -214,10 +243,13 @@ class DistributedBackend(PassBackend):
         self.capacity = capacity
         self.batch = batch
         self.taper_wire = taper_wire
-        self.overflow = None  # traced bool, set by the first pass
+        self.overflow = None  # traced bool, set by the first pass of a run
+
+    def begin_run(self):
+        self.overflow = None
 
     def rank(self, digit, n_bins, *, batch_hint=None, carry_in=None,
-             bin_start=None):
+             bin_start=None, engine=None):
         raise NotImplementedError(
             "the distributed pass fuses rank + placement; use lsd_pass")
 
@@ -230,7 +262,8 @@ class DistributedBackend(PassBackend):
 
         out, ov = _distributed_pass(u, dp.shift, dp.bits, self.axis,
                                     self.capacity, self.batch,
-                                    self.taper_wire, payloads=payloads)
+                                    self.taper_wire, payloads=payloads,
+                                    engine=dp.engine)
         self.overflow = ov if self.overflow is None else self.overflow | ov
         return out
 
@@ -253,6 +286,7 @@ class PlanExecutor:
         """Sorted keys.  Backends with ``reconstructs`` return the
         Algorithm-5 output dtype (int32/uint32 by ``plan.p``); others
         return the uint32 key stream — callers cast as needed."""
+        self.backend.begin_run()
         if keys.shape[0] == 0:
             return keys
         u = keys.astype(jnp.uint32)
@@ -263,7 +297,8 @@ class PlanExecutor:
             return self.backend.lsd_pass(u, last)
         rank, counts, _ = self.backend.rank(
             _digit_of(u, last), last.n_bins,
-            batch_hint=last.rank_batch(self.backend.rank_base))
+            batch_hint=last.rank_batch(self.backend.rank_base),
+            engine=last.engine)
         if last.shift:
             # compressed entries: only the trailing bits travel; the
             # prefix is rebuilt from bin positions.
@@ -286,6 +321,7 @@ class PlanExecutor:
         ``(sorted_keys, values_in_sorted_key_order)``; ties keep arrival
         order (stable), which is what the query operators lean on for
         multi-word keys and reproducible joins."""
+        self.backend.begin_run()
         if keys.shape[0] == 0:
             return keys, values
         u = keys.astype(jnp.uint32)
@@ -296,7 +332,8 @@ class PlanExecutor:
             return self.backend.lsd_pass_pairs(u, (values,), last)
         rank, counts, _ = self.backend.rank(
             _digit_of(u, last), last.n_bins,
-            batch_hint=last.rank_batch(self.backend.rank_base))
+            batch_hint=last.rank_batch(self.backend.rank_base),
+            engine=last.engine)
         if last.shift:
             trailing, values = self.backend.scatter(
                 rank, u & jnp.uint32((1 << last.shift) - 1), values)
@@ -311,6 +348,7 @@ class PlanExecutor:
         """Stable permutation with ``keys[perm]`` sorted: every pass is a
         payload-carrying LSD pass (the permutation is the payload, so
         there is nothing to reconstruct from bin positions)."""
+        self.backend.begin_run()
         n = keys.shape[0]
         idx = jnp.arange(n, dtype=jnp.int32)
         if n == 0:
@@ -332,6 +370,7 @@ class PlanExecutor:
         segments so grouping is invariant and the MSD pass never re-runs.
         Returns the reconstructed sorted keys.
         """
+        self.backend.begin_run()
         n = entries.shape[0]
         last = plan.passes[-1]
         if n == 0 or last.shift == 0:
@@ -351,7 +390,8 @@ class PlanExecutor:
             arr_g, _, _ = self.backend.rank(
                 digit, dp.n_bins,
                 batch_hint=dp.rank_batch(self.backend.rank_base),
-                bin_start=jnp.zeros((dp.n_bins,), jnp.int32))
+                bin_start=jnp.zeros((dp.n_bins,), jnp.int32),
+                engine=dp.engine)
             # (segments, n_bins) digit table: one O(n) scatter-add
             table = jnp.zeros((last.n_bins, dp.n_bins), jnp.int32).at[
                 seg, digit].add(1)
@@ -376,8 +416,10 @@ class PlanExecutor:
         """
         from repro.core import fractal_tree as ft
 
+        self.backend.begin_run()
         n = keys.shape[0]
         depth, t = plan.depth, plan.trailing_bits
+        last = plan.passes[-1]
         slices = jnp.array_split(keys, num_batches)
         hists = [ft.build_histogram(s, plan.p, depth) for s in slices]
         merged = functools.reduce(ft.merge_histograms, hists)
@@ -391,7 +433,8 @@ class PlanExecutor:
             su = s.astype(jnp.uint32)
             prefix = (su >> t).astype(jnp.int32)
             rank, _, carry = self.backend.rank(
-                prefix, 1 << depth, carry_in=carry, bin_start=bin_start)
+                prefix, 1 << depth, carry_in=carry, bin_start=bin_start,
+                engine=last.engine)
             # grouped mode scatters only the compressed trailing entries
             # (the prefix is implied by the destination segment); the
             # fallback must carry full keys for its plan re-run.

@@ -76,18 +76,21 @@ from repro.core.sort_plan import (
     SortPlan,
     make_sort_plan,
     rank_chunk_len,
+    scatter_tile_len,
 )
 
 __all__ = [
     "PassStats",
     "SortStats",
     "fractal_rank",
+    "fractal_rank_scatter",
     "fractal_rank_serial",
     "fractal_sort",
     "fractal_argsort",
     "fractal_sort_batched",
     "fractal_sort_pairs",
     "fractal_sort_stats",
+    "rank_engine",
     "reconstruct",
 ]
 
@@ -352,6 +355,117 @@ def fractal_rank_serial(
                         bin_start, n_bins)
 
 
+def fractal_rank_scatter(
+    prefix: jnp.ndarray,
+    n_bins: int,
+    batch: int = 1024,
+    carry_in: Optional[jnp.ndarray] = None,
+    bin_start: Optional[jnp.ndarray] = None,
+):
+    """Scatter/bincount + searchsorted rank engine: O(n log tile) per pass,
+    *independent of the digit width* — the engine that makes wide passes
+    executable on CPU (the one-hot engines above do O(n * n_bins) work on
+    a materialized tile, which is what forced ``DEFAULT_MAX_BINS_LOG2=4``).
+
+    Same contract and results as :func:`fractal_rank` /
+    :func:`fractal_rank_serial` (``(rank, counts, carry_out)``, streaming
+    ``carry_in``/``bin_start`` injection), different arithmetic:
+
+    * the stream is cut into power-of-two *tiles* (``batch`` elements,
+      LLC-sized); each tile packs digit and arrival position into one
+      word — ``comp = digit << log2(tile) | pos`` — and sorts the packed
+      words (a single-operand XLA sort, no payload: position rides the
+      low bits, so the sort is stable by construction and both fields
+      shift/mask back out);
+    * per-tile digit histograms come from one scatter-add (bincount) over
+      (tile, digit) pairs — or, when the digit range is narrow, from
+      ``searchsorted`` probes of the sorted composites at the tile's
+      digit boundaries (O(tiles * n_bins * log tile), cheaper than the
+      O(n) scatter when bins are few);
+    * at sorted position ``i`` of a tile, the intra-tile arrival is just
+      ``i - (elements of the tile with smaller digits)`` — the exclusive
+      digit cumsum the probe/bincount table already holds; the cross-tile
+      carry is one exclusive scan over the (tiles, n_bins) table, exactly
+      the chunk-carry structure of the one-hot engine;
+    * one scatter through the unpacked positions returns ranks to arrival
+      order.
+
+    Memory: O(n + tiles * n_bins).  ``batch`` is the tile length (rounded
+    down to a power of two; :func:`~repro.core.sort_plan.scatter_tile_len`
+    is the per-pass executor hint — unlike the one-hot chunk hint it
+    *grows* with ``n_bins``).
+    """
+    n = prefix.shape[0]
+    prefix = prefix.astype(jnp.int32)
+    if carry_in is None:
+        carry_in = jnp.zeros((n_bins,), jnp.int32)
+    if n == 0:
+        return _rank_empty(n_bins, carry_in, bin_start)
+    # Inherit the data's varying-manual-axes (shard_map VMA tracking).
+    carry_in = carry_in + prefix[0] * 0
+    bits = max(n_bins - 1, 1).bit_length()
+    tlog = max(3, batch.bit_length() - 1)       # floor pow2 of the hint
+    tlog = min(tlog, ft.ceil_log2(max(n, 8)),   # no tile wider than the data
+               31 - bits)                       # composite packing headroom
+    tile = 1 << tlog
+    num_tiles = (n + tile - 1) // tile
+    pad = num_tiles * tile - n
+    if pad:  # pad digit n_bins: sorts to the tile tail, dropped from counts
+        prefix = jnp.concatenate(
+            [prefix, jnp.full((pad,), n_bins, jnp.int32)])
+    tiles = prefix.reshape(num_tiles, tile).astype(jnp.uint32)
+    comp = (tiles << tlog) | jnp.arange(tile, dtype=jnp.uint32)[None, :]
+    sc = jnp.sort(comp, axis=1)
+    ds = (sc >> tlog).astype(jnp.int32)              # digits, sorted order
+    orig = (sc & jnp.uint32(tile - 1)).astype(jnp.int32)
+    if num_tiles * (n_bins + 1) <= 2 * n:
+        # narrow digits: per-tile (lower, counts) from boundary probes of
+        # the sorted composites — bin b's tile segment starts where
+        # composites reach b << tlog.
+        probes = jnp.arange(n_bins + 1, dtype=jnp.uint32) << tlog
+        bounds = jax.vmap(
+            lambda s: jnp.searchsorted(s, probes))(sc).astype(jnp.int32)
+        lower, table = bounds[:, :-1], jnp.diff(bounds, axis=1)
+    else:
+        # wide digits: one flat scatter-add (bincount) over (tile, digit)
+        table = jnp.zeros((num_tiles, n_bins), jnp.int32).at[
+            jnp.repeat(jnp.arange(num_tiles), tile), prefix
+        ].add(1, mode="drop")
+        lower = jnp.cumsum(table, axis=1) - table
+    counts = table.sum(axis=0)
+    tile_carry = carry_in[None, :] + jnp.cumsum(table, axis=0) - table
+    safe = jnp.clip(ds, 0, n_bins - 1)
+    if bin_start is None:
+        bin_start = ft.exclusive_cumsum(counts)
+    rank_sorted = (bin_start[safe]
+                   + jnp.take_along_axis(tile_carry, safe, axis=1)
+                   + jnp.arange(tile, dtype=jnp.int32)[None, :]
+                   - jnp.take_along_axis(lower, safe, axis=1))
+    rank = jnp.zeros((num_tiles, tile), jnp.int32).at[
+        jnp.arange(num_tiles)[:, None], orig].set(rank_sorted)
+    return rank.reshape(-1)[:n], counts, carry_in + counts
+
+
+#: The pluggable rank engines (one contract, three arithmetics): "onehot"
+#: is the chunk-parallel MXU-shaped tile (fast for narrow digits, TPU),
+#: "scatter" the sorted-tile scatter/bincount engine (wide digits, CPU),
+#: "serial" the scan-over-chunks oracle.
+RANK_ENGINES = {
+    "onehot": fractal_rank,
+    "scatter": fractal_rank_scatter,
+    "serial": fractal_rank_serial,
+}
+
+
+def rank_engine(name: Optional[str]):
+    """Resolve an engine hint to its rank function (None = "onehot",
+    the historical default)."""
+    fn = RANK_ENGINES.get(name or "onehot")
+    assert fn is not None, (
+        f"unknown rank engine {name!r}: one of {sorted(RANK_ENGINES)}")
+    return fn
+
+
 # ---------------------------------------------------------------------------
 # Reconstruction (Algorithm 5)
 # ---------------------------------------------------------------------------
@@ -384,29 +498,55 @@ def reconstruct(counts: jnp.ndarray, trailing: jnp.ndarray, l_n: int, p: int,
 
 
 # ---------------------------------------------------------------------------
-# Public sorts — thin wrappers: build a SortPlan, hand it to a PlanExecutor
+# Public sorts — thin wrappers: resolve a SortPlan, hand it to a PlanExecutor
 # ---------------------------------------------------------------------------
 
 
+def _resolve_plan(n: int, p: int, l_n: Optional[int],
+                  max_bins_log2: Optional[int],
+                  plan: Optional[SortPlan]) -> SortPlan:
+    """Plan resolution shared by every entry point: an explicit ``plan``
+    wins; explicit ``l_n``/``max_bins_log2`` build the classical static
+    plan; all-defaults consults the per-host autotune cache
+    (:func:`~repro.core.autotune.tuned_plan` — free, never measures, and
+    identical to the static default until a sweep has recorded a
+    winner)."""
+    if plan is not None:
+        assert plan.p == p, f"plan is for p={plan.p}, sort asked p={p}"
+        return plan
+    if l_n is None and max_bins_log2 is None:
+        from repro.core.autotune import tuned_plan
+
+        return tuned_plan(n, p)
+    return make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("p", "l_n", "batch", "max_bins_log2"))
+                   static_argnames=("p", "l_n", "batch", "max_bins_log2",
+                                    "plan"))
 def fractal_sort(keys: jnp.ndarray, p: int, l_n: Optional[int] = None,
                  batch: int = 1024,
-                 max_bins_log2: Optional[int] = None) -> jnp.ndarray:
+                 max_bins_log2: Optional[int] = None,
+                 plan: Optional[SortPlan] = None) -> jnp.ndarray:
     """Sort integer keys in [0, 2**p) by executing a :class:`SortPlan`:
     bounded-width stable LSD digit passes plus one fractal MSD pass
     ("compressed entries").  ``max_bins_log2`` caps per-pass bins at
-    ``2**max_bins_log2`` (default ``2**4``; see bench_sortplan)."""
+    ``2**max_bins_log2``; ``plan`` pins an exact plan (e.g. from
+    :func:`~repro.core.autotune.autotune_plan`); all-defaults runs the
+    host's tuned plan when one is cached, else the static
+    ``DEFAULT_MAX_BINS_LOG2`` plan."""
     n = keys.shape[0]
-    plan = make_sort_plan(n, p, l_n=l_n, max_bins_log2=max_bins_log2)
+    plan = _resolve_plan(n, p, l_n, max_bins_log2, plan)
     return PlanExecutor(JnpBackend(batch=batch)).run(keys, plan)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("p", "l_n", "batch", "max_bins_log2"))
+                   static_argnames=("p", "l_n", "batch", "max_bins_log2",
+                                    "plan"))
 def fractal_sort_pairs(keys: jnp.ndarray, values: jnp.ndarray, p: int,
                        l_n: Optional[int] = None, batch: int = 1024,
-                       max_bins_log2: Optional[int] = None):
+                       max_bins_log2: Optional[int] = None,
+                       plan: Optional[SortPlan] = None):
     """Key–value sort: ``(sorted_keys, values_in_sorted_key_order)`` for
     integer keys in [0, 2**p) and one payload column of equal length (any
     fixed-width dtype — the query layer passes int32 row ids).
@@ -418,27 +558,29 @@ def fractal_sort_pairs(keys: jnp.ndarray, values: jnp.ndarray, p: int,
     (key, row-id) pairs costs the payload's bytes but keeps the
     compressed-entry bandwidth win on the keys.  Stable: equal keys keep
     arrival order, which `order_by` and the sort-merge join rely on."""
-    plan = make_sort_plan(keys.shape[0], p, l_n=l_n,
-                          max_bins_log2=max_bins_log2)
+    plan = _resolve_plan(keys.shape[0], p, l_n, max_bins_log2, plan)
     return PlanExecutor(JnpBackend(batch=batch)).run_pairs(keys, values, plan)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "batch", "max_bins_log2"))
+@functools.partial(jax.jit, static_argnames=("p", "batch", "max_bins_log2",
+                                             "plan"))
 def fractal_argsort(keys: jnp.ndarray, p: int, batch: int = 1024,
-                    max_bins_log2: Optional[int] = None) -> jnp.ndarray:
+                    max_bins_log2: Optional[int] = None,
+                    plan: Optional[SortPlan] = None) -> jnp.ndarray:
     """Stable permutation ``perm`` with ``keys[perm]`` sorted (exact, full
     ``p``-bit precision — the MoE dispatch form where p = ceil(log2 E)).
 
     Runs every plan pass as a payload-carrying LSD pass (the permutation is
     the payload, so there is nothing to reconstruct from bin positions)."""
     assert p <= 32, "argsort covers p <= 32 via the digit plan"
-    plan = make_sort_plan(keys.shape[0], p, max_bins_log2=max_bins_log2)
+    plan = _resolve_plan(keys.shape[0], p, None, max_bins_log2, plan)
     return PlanExecutor(JnpBackend(batch=batch)).run_argsort(keys, plan)
 
 
 def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
                          l_n: Optional[int] = None, batch: int = 1024,
-                         max_bins_log2: Optional[int] = None):
+                         max_bins_log2: Optional[int] = None,
+                         plan: Optional[SortPlan] = None):
     """Streaming variant (paper §III.C/D): the input arrives in
     ``num_batches`` equal slices; the trie histogram is *cached and merged*
     across slices, then ranks stream through the shared carry and a single
@@ -449,7 +591,6 @@ def fractal_sort_batched(keys: jnp.ndarray, p: int, num_batches: int,
     Returns ``(sorted_keys, per-slice histograms)`` so tests can check the
     merge telescopes: ``merge(h_1..h_B) == build(all keys)``.
     """
-    plan = make_sort_plan(keys.shape[0], p, l_n=l_n,
-                          max_bins_log2=max_bins_log2)
+    plan = _resolve_plan(keys.shape[0], p, l_n, max_bins_log2, plan)
     return PlanExecutor(JnpBackend(batch=batch)).run_streaming(
         keys, plan, num_batches)

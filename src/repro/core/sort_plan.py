@@ -23,6 +23,21 @@ emits a sequence of stable counting passes, LSD -> MSD:
 
 Digit widths also never exceed the trie depth scale ``~log2(n)``, so tiny
 inputs (n=64, p=16) get a few 5-bit passes instead of one 1024-bin pass.
+
+**Rank engines (per-pass execution hints).**  The O(n * 2**w) term above
+is the *one-hot* engine's; the *scatter* engine
+(:func:`~repro.core.fractal_sort.fractal_rank_scatter`) ranks a pass in
+O(n log tile) independent of the digit width, which is what makes wide
+passes executable on CPU at all.  Each :class:`DigitPass` carries an
+optional ``engine`` hint ("onehot" / "scatter" / ``None`` = let the
+backend pick via the analytic cost model below); hints are *execution*
+metadata — two plans differing only in hints sort identically.
+:func:`pass_cost` / :func:`plan_cost` model the trade analytically (in
+"bin-column units": one elementwise op over an n-row one-hot column), and
+:func:`pick_engine` is the model's per-pass argmin.  The real winner per
+host is measured once by :func:`~repro.core.autotune.autotune_plan` and
+cached; the model seeds the candidate grid and serves as the no-cache
+default.
 """
 
 from __future__ import annotations
@@ -38,7 +53,11 @@ __all__ = [
     "DigitPass",
     "SortPlan",
     "make_sort_plan",
+    "pass_cost",
+    "pick_engine",
+    "plan_cost",
     "rank_chunk_len",
+    "scatter_tile_len",
 ]
 
 # Default per-pass bin-count cap (2**4 = 16 bins).  Swept by
@@ -74,21 +93,101 @@ def rank_chunk_len(n_bins: int, base: int = 1024) -> int:
     return max(8, min(base, _RANK_TILE_BUDGET // max(n_bins, 1)))
 
 
+# Scatter-engine tile bounds (elements per sorted tile).  The engine sorts
+# digit-and-origin composites per tile, so per-element work grows only
+# log(tile); tiles below _SCATTER_TILE_MIN waste the flat per-tile
+# overheads, tiles above _SCATTER_TILE_MAX stop fitting the composite
+# packing headroom (tile * n_bins <= 2**31 at n_bins = 2**16) and push the
+# sorted working set out of LLC.  Measured on this 2-core host: 2**11..2**13
+# is flat-optimal for bins 2**4..2**11 with 2**13 best at 2**16 bins.
+_SCATTER_TILE_MIN = 1 << 11
+_SCATTER_TILE_MAX = 1 << 13
+
+
+def scatter_tile_len(n_bins: int, base: int = 1024) -> int:
+    """Execution hint: sorted-tile length for a scatter-engine pass.
+
+    Unlike :func:`rank_chunk_len` this *grows* with ``n_bins`` (wider
+    digits want wider tiles so the per-tile (tiles, n_bins) histogram
+    table stays small next to the key stream); ``base`` only ever raises
+    the floor — the user batch knob can widen tiles but a narrow one-hot
+    chunk hint must not shrink them."""
+    tile = 1 << max(n_bins - 1, 1).bit_length()  # next_pow2(n_bins)
+    return max(min(max(tile, _SCATTER_TILE_MIN), _SCATTER_TILE_MAX), base)
+
+
+# --- analytic per-pass cost model (engine selection prior) ------------------
+#
+# Unit: one elementwise op over an n-row one-hot bin column ("bin-column
+# unit"), the natural cost unit of the one-hot engine.  Calibrated on this
+# host at n = 2**17 (see BENCH_sort.json / bench_sortplan's engines mode):
+# the one-hot rank costs ~n * n_bins units; the scatter engine's tile sort
+# plus gathers cost the equivalent of ~32 bin columns regardless of width,
+# plus a per-(tiles x n_bins) histogram-table term that only matters for
+# very wide digits.  The model exists to pick sane defaults *without* a
+# measurement cache — `autotune_plan` measures the real crossover per host
+# and overrides it.
+_SCATTER_BASE_UNITS = 32
+_SCATTER_TABLE_UNITS = 8
+
+
+def pass_cost(n: int, bits: int, engine: str) -> float:
+    """Analytic rank cost of one ``bits``-wide pass over ``n`` keys, in
+    bin-column units (relative — compare across (bits, engine), not
+    hosts)."""
+    n_bins = 1 << bits
+    if engine == "onehot":
+        return float(n) * n_bins
+    assert engine == "scatter", f"unknown engine {engine!r}"
+    tile = scatter_tile_len(n_bins)
+    return float(n) * (_SCATTER_BASE_UNITS
+                       + _SCATTER_TABLE_UNITS * n_bins / tile)
+
+
+def pick_engine(n: int, bits: int) -> str:
+    """The cost model's per-pass engine argmin (the no-cache default the
+    JnpBackend applies when a pass carries no explicit hint)."""
+    return min(("onehot", "scatter"), key=lambda e: pass_cost(n, bits, e))
+
+
+def plan_cost(plan: "SortPlan", engine: Optional[str] = None) -> float:
+    """Analytic rank cost of a whole plan (bin-column units): the sum of
+    per-pass costs under each pass's engine hint, ``engine`` overriding
+    unhinted passes (``None`` = the cost model's own pick).  Key *traffic*
+    is deliberately excluded — it is O(n * passes) for every engine and
+    already modeled by ``fractal_sort_stats``; this function ranks rank-
+    stage arithmetic, the term that used to force narrow plans."""
+    total = 0.0
+    for dp in plan.passes:
+        e = dp.engine or engine or pick_engine(plan.n, dp.bits)
+        total += pass_cost(plan.n, dp.bits, e)
+    return total
+
+
 @dataclasses.dataclass(frozen=True)
 class DigitPass:
-    """One stable counting pass over key bits ``[shift, shift + bits)``."""
+    """One stable counting pass over key bits ``[shift, shift + bits)``.
+
+    ``engine`` is an execution hint — "onehot" (materialized one-hot tile,
+    MXU-shaped), "scatter" (sorted-tile scatter/bincount engine), or
+    ``None`` (backend picks via :func:`pick_engine`).  Hints never change
+    the sorted output, only how ranks are computed."""
 
     shift: int
     bits: int
     kind: str = "lsd"  # "lsd" = full-key scatter; "msd" = fractal/reconstruct
+    engine: Optional[str] = None
 
     @property
     def n_bins(self) -> int:
         return 1 << self.bits
 
     def rank_batch(self, base: int = 1024) -> int:
-        """Per-pass execution hint: the rank chunk length the executor
-        should stream this pass at (see :func:`rank_chunk_len`)."""
+        """Per-pass execution hint: the rank chunk length (one-hot) or
+        sorted-tile length (scatter) the executor should stream this pass
+        at."""
+        if self.engine == "scatter":
+            return scatter_tile_len(self.n_bins, base)
         return rank_chunk_len(self.n_bins, base)
 
 
@@ -139,7 +238,8 @@ class SortPlan:
 
 
 def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
-                   max_bins_log2: Optional[int] = None) -> SortPlan:
+                   max_bins_log2: Optional[int] = None,
+                   engine: Optional[str] = None) -> SortPlan:
     """Decompose a ``p``-bit sort of ``n`` keys into bounded digit passes.
 
     An explicit ``l_n`` sets the trie depth of the final pass and *wins
@@ -150,8 +250,12 @@ def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
     trailing ``p - depth`` bits are split into balanced LSD digits no
     wider than the cap and no wider than the trie-depth scale, so
     ``n_bins`` never dwarfs ``n``.
+
+    ``engine`` stamps every pass's rank-engine hint ("onehot"/"scatter";
+    ``None`` leaves the choice to the executing backend's cost model).
     """
     assert 1 <= p <= 32, f"p={p} out of range (1..32)"
+    assert engine in (None, "onehot", "scatter"), f"unknown engine {engine!r}"
     w_max = DEFAULT_MAX_BINS_LOG2 if max_bins_log2 is None else max_bins_log2
     assert 1 <= w_max <= 16, f"max_bins_log2={w_max} out of range (1..16)"
     if l_n is None:
@@ -170,8 +274,9 @@ def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
         shift = 0
         for i in range(num):
             bits = base + (1 if i < extra else 0)
-            passes.append(DigitPass(shift=shift, bits=bits, kind="lsd"))
+            passes.append(DigitPass(shift=shift, bits=bits, kind="lsd",
+                                    engine=engine))
             shift += bits
         assert shift == t
-    passes.append(DigitPass(shift=t, bits=depth, kind="msd"))
+    passes.append(DigitPass(shift=t, bits=depth, kind="msd", engine=engine))
     return SortPlan(n=n, p=p, passes=tuple(passes))

@@ -1,6 +1,9 @@
-"""Pallas TPU kernel: stable fractal rank (scatter-index) computation.
+"""Pallas TPU kernels: stable fractal rank (scatter-index) computation.
 
-For each key, its final output slot:
+Two rank engines, one contract (mirroring the jnp engines in
+``core/fractal_sort.py``):
+
+**One-hot** (:func:`fractal_rank_kernel`) — for each key, its final slot
 
     rank[i] = bin_start[key[i]] + carry[key[i]] + (earlier equal keys in tile)
 
@@ -15,12 +18,26 @@ VPU instead of serialized VMEM gathers:
     rank  = base + intra
 
 One read of the key stream, one write of the rank stream; the carry never
-leaves VMEM.
+leaves VMEM.  The one-hot tile costs O(block * n_bins) per step — great
+while the tile feeds the MXU, ruinous for wide digits.
+
+**Scatter** (:func:`fractal_rank_scatter_kernel`) — engine parity with
+:func:`~repro.core.fractal_sort.fractal_rank_scatter`: each block packs
+(digit, position) into one word, sorts the packed words in-block
+(position in the low bits = stable by construction), reads the per-digit
+block segment boundaries off the sorted composites with ``searchsorted``
+probes, and emits ranks with one in-block scatter — O(block log block +
+n_bins) per step, digit-width independent.  The same VMEM carry scratch
+streams across the grid.  Off-TPU (interpret mode, this repo's CI) the
+sort and probes execute as ordinary XLA ops; on a real TPU the in-kernel
+sort is the port's open risk, and the MXU-shaped one-hot engine stays the
+default there (see ``autotune_plan``'s per-backend cache).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,12 +100,76 @@ def pltpu_scratch(shape, dtype):
     return pltpu.VMEM(shape, dtype)
 
 
+def _rank_scatter_kernel(keys_ref, bin_start_ref, rank_ref, carry_ref, *,
+                         n_bins: int, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    blog = block.bit_length() - 1  # block is a power of two (driver assert)
+    keys = keys_ref[...]  # (block,) digits; padding carries n_bins
+    comp = (keys.astype(jnp.uint32) << blog) | \
+        jax.lax.iota(jnp.uint32, block)
+    sc = jnp.sort(comp)
+    ds = (sc >> blog).astype(jnp.int32)          # digits, sorted order
+    orig = (sc & jnp.uint32(block - 1)).astype(jnp.int32)
+    # per-digit block segments off the sorted composites: bin b's segment
+    # starts where composites reach b << blog (padding sorts past the
+    # n_bins probe, so counts exclude it).
+    probes = jax.lax.iota(jnp.uint32, n_bins + 1) << blog
+    bounds = jnp.searchsorted(sc, probes).astype(jnp.int32)
+    lower = jnp.searchsorted(sc, (sc >> blog) << blog).astype(jnp.int32)
+    safe = jnp.minimum(ds, n_bins - 1)
+    start = bin_start_ref[...] + carry_ref[...]
+    rank_sorted = start[safe] + jax.lax.iota(jnp.int32, block) - lower
+    rank_ref[...] = jnp.zeros((block,), jnp.int32).at[orig].set(rank_sorted)
+    carry_ref[...] += bounds[1:] - bounds[:-1]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def fractal_rank_scatter_kernel(keys: jnp.ndarray, bin_start: jnp.ndarray,
+                                n_bins: int, block: int = DEFAULT_BLOCK,
+                                interpret: bool = True) -> jnp.ndarray:
+    """Scatter-engine ranks given precomputed exclusive bin starts.
+
+    ``keys``: 1-D int32 in [0, n_bins) (the driver pads with ``n_bins``,
+    which sorts past every real composite; padded slots emit garbage
+    ranks and are sliced).  Same signature and output as
+    :func:`fractal_rank_kernel`, digit-width-independent arithmetic.
+    """
+    assert block & (block - 1) == 0, f"block={block} must be a power of two"
+    assert n_bins << (block.bit_length() - 1) < (1 << 32), (
+        f"composite packing overflow: n_bins={n_bins} block={block}")
+    n = keys.shape[0]
+    pad = (-n) % block
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), n_bins, keys.dtype)])
+    grid = keys.shape[0] // block
+    out = pl.pallas_call(
+        functools.partial(_rank_scatter_kernel, n_bins=n_bins, block=block),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n_bins,), lambda i: (0,)),  # resident all grid
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((keys.shape[0],), jnp.int32),
+        scratch_shapes=[pltpu_scratch((n_bins,), jnp.int32)],
+        interpret=interpret,
+    )(keys.astype(jnp.int32), bin_start.astype(jnp.int32))
+    return out[:n]
+
+
 def fractal_rank_counts(digit: jnp.ndarray, n_bins: int,
                         block: int = DEFAULT_BLOCK, interpret: bool = True,
-                        bin_start: jnp.ndarray = None):
+                        bin_start: jnp.ndarray = None,
+                        engine: Optional[str] = None):
     """Kernel-path rank primitive on an already-extracted digit stream:
     histogram kernel → exclusive scan (tiny: ``n_bins`` ints, host/VPU) →
-    rank kernel, the one-hot tile inside bounded at ``block * n_bins``.
+    rank kernel (the ``engine``'s — one-hot tile bounded at
+    ``block * n_bins``, or the width-independent scatter kernel).
 
     This is the :class:`~repro.core.executor.PallasBackend`'s ``rank``
     primitive, so its return matches the executor's streaming-carry
@@ -96,17 +177,23 @@ def fractal_rank_counts(digit: jnp.ndarray, n_bins: int,
     (the kernel's carry lives in VMEM scratch and starts at zero per
     call — cross-call streaming is the jnp backend's mode).  ``bin_start``
     may be supplied when the global histogram is already known
-    (distributed merge).
+    (distributed merge).  ``engine`` is the plan's per-pass hint; ``None``
+    keeps the one-hot kernel — the MXU-shaped tile is the TPU-native
+    default, so the kernel driver does *not* apply the CPU cost model.
     """
     from repro.core.fractal_tree import exclusive_cumsum
     from repro.kernels.fractal_histogram import fractal_histogram
 
+    assert engine in (None, "onehot", "scatter"), (
+        f"unknown kernel rank engine {engine!r}")
     counts = fractal_histogram(digit, n_bins, block=block,
                                interpret=interpret)
     if bin_start is None:
         bin_start = exclusive_cumsum(counts)
-    rank = fractal_rank_kernel(digit, bin_start, n_bins, block=block,
-                               interpret=interpret)
+    kernel = (fractal_rank_scatter_kernel if engine == "scatter"
+              else fractal_rank_kernel)
+    rank = kernel(digit, bin_start, n_bins, block=block,
+                  interpret=interpret)
     return rank, counts, counts
 
 
@@ -116,7 +203,8 @@ def fractal_rank_digit(keys: jnp.ndarray, digit_pass,
     """Multi-digit driver: stable ranks on one :class:`DigitPass` digit.
 
     Extracts the ``bits``-wide digit at ``shift`` from the raw key stream
-    and runs :func:`fractal_rank_counts` on it.
+    and runs :func:`fractal_rank_counts` on it under the pass's engine
+    hint.
 
     Returns ``(rank, counts)``; ``bin_start`` may be supplied when the
     global histogram is already known (distributed merge).
@@ -126,5 +214,6 @@ def fractal_rank_digit(keys: jnp.ndarray, digit_pass,
              & (dp.n_bins - 1)).astype(jnp.int32)
     rank, counts, _ = fractal_rank_counts(digit, dp.n_bins, block=block,
                                           interpret=interpret,
-                                          bin_start=bin_start)
+                                          bin_start=bin_start,
+                                          engine=dp.engine)
     return rank, counts

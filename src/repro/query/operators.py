@@ -32,12 +32,14 @@ loop: operators build plans, and the plan-pass loop stays solely in
 
 from __future__ import annotations
 
+import functools
 from typing import Mapping, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fractal_argsort, fractal_sort_pairs
+from repro.core import JnpBackend, PlanExecutor, SortPlan
 from repro.query.codec import (
     Codec,
     ColumnSpec,
@@ -87,43 +89,121 @@ def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
     return codec, codec.encode(cols)
 
 
-def sort_rowids(words: jnp.ndarray, bits: int):
+@functools.lru_cache(maxsize=256)
+def _rowid_chain(widths: Tuple[int, ...], plans: Tuple[SortPlan, ...]):
+    """One jitted pass chain per (word widths, per-word plans).
+
+    Multi-word codes (>32-bit composites, float64) used to retrace and
+    dispatch one executor run *per word* from Python — `order_by` paid
+    per-word host orchestration on every call.  The whole chain (argsort
+    word W-1 → permute → argsort word W-2 → …) now traces once into a
+    single jitted function, cached here by its static configuration; jax's
+    own jit cache then specializes per input shape.  Single-word codes jit
+    the one pairs run the same way.
+    """
+    assert len(widths) == len(plans)
+
+    @jax.jit
+    def chain(words):
+        n = words.shape[0]
+        ex = PlanExecutor(JnpBackend())
+        if len(widths) == 1:
+            sorted_keys, rowids = ex.run_pairs(
+                words[:, 0], jnp.arange(n, dtype=jnp.int32), plans[0])
+            return sorted_keys.astype(jnp.uint32)[:, None], rowids
+        perm = jnp.arange(n, dtype=jnp.int32)
+        for j in range(len(widths) - 1, -1, -1):
+            sub = ex.run_argsort(words[perm, j], plans[j])
+            perm = perm[sub]
+        return words[perm], perm
+
+    return chain
+
+
+def sort_rowids(words: jnp.ndarray, bits: int,
+                plans: Optional[Tuple[SortPlan, ...]] = None):
     """Stably sort multi-word codes: ``(sorted_words, rowids)``.
 
     Single-word codes run one executor pairs plan (row ids ride the
     scatter path, prefix bits reconstructed on the MSD pass).  Multi-word
     codes chain one stable argsort per 32-bit word, least-significant
     first — stability makes the composition lexicographic, i.e. numeric
-    on the full code.
+    on the full code.  The whole chain runs as one jitted dispatch
+    (:func:`_rowid_chain`).
+
+    ``plans`` pins per-word :class:`SortPlan`\\ s (one per word of the
+    code); by default each word resolves through the per-host autotune
+    cache (:func:`~repro.core.autotune.tuned_plan`), so codec-driven key
+    widths get wide scatter-engine passes wherever the host's sweep found
+    them faster.
     """
     widths = word_widths(bits)
     n = words.shape[0]
     if n == 0:
         return words, jnp.zeros((0,), jnp.int32)
-    if len(widths) == 1:
-        sorted_keys, rowids = fractal_sort_pairs(
-            words[:, 0], jnp.arange(n, dtype=jnp.int32), p=widths[0])
-        return sorted_keys.astype(jnp.uint32)[:, None], rowids
-    perm = jnp.arange(n, dtype=jnp.int32)
-    for j in range(len(widths) - 1, -1, -1):
-        sub = fractal_argsort(words[perm, j], p=widths[j])
-        perm = perm[sub]
-    return words[perm], perm
+    if plans is None:
+        from repro.core.autotune import tuned_plan
+
+        plans = tuple(tuned_plan(n, w) for w in widths)
+    assert len(plans) == len(widths), (
+        f"{len(widths)}-word code needs {len(widths)} plans, "
+        f"got {len(plans)}")
+    return _rowid_chain(widths, tuple(plans))(words)
 
 
-def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None
-             ) -> Table:
+def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
+             plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
     """Multi-column ORDER BY (stable): rows reordered by one gather of the
-    pairs sort's row-id payload."""
+    pairs sort's row-id payload.  ``plans`` pins per-word sort plans
+    (default: the host's tuned plans for the codec's word widths)."""
     codec, words = _composite_for(table, by, codecs)
-    _, rowids = sort_rowids(words, codec.bits)
+    _, rowids = sort_rowids(words, codec.bits, plans)
     return table.take(rowids)
 
 
+# MSD digit width of the top-k pruning histogram: wide enough that a
+# uniform-ish key column prunes hard (1024 bins), narrow enough that the
+# histogram is negligible next to one plan pass.
+_TOPK_PRUNE_BITS = 10
+
+
 def top_k(table: Table, by, k: int,
-          codecs: Optional[Mapping[str, Codec]] = None) -> Table:
-    """First ``k`` rows of the stable ORDER BY (ties keep arrival order)."""
-    return order_by(table, by, codecs).head(k)
+          codecs: Optional[Mapping[str, Codec]] = None,
+          plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
+    """First ``k`` rows of the stable ORDER BY (ties keep arrival order),
+    *without* the full sort: one MSD histogram over the code's leading
+    digit finds the smallest digit value ``cut`` whose cumulative count
+    reaches ``k`` — every top-k row must carry a leading digit ``<= cut``
+    (at least k rows do, and they all precede every digit ``> cut`` in key
+    order) — and only those candidate rows enter the pass chain.  The
+    operator-level order_by+top_k fusion: on selective keys the sort runs
+    over ~k-ish rows instead of n.
+
+    Ties and stability are preserved exactly: candidate rows are taken in
+    arrival order, boundary-digit ties are all candidates, and the
+    candidate sort is the global stable sort restricted to a prefix-closed
+    key range.  ``plans`` applies when the sort runs over all ``n`` rows
+    (k >= n, or no pruning opportunity); a pruned candidate subset
+    re-resolves tuned plans for its own (smaller) length.
+    """
+    if k <= 0:
+        return table.head(0)
+    codec, words = _composite_for(table, by, codecs)
+    n = words.shape[0]
+    if k < n:
+        top_bits = min(_TOPK_PRUNE_BITS, word_widths(codec.bits)[0])
+        shift = word_widths(codec.bits)[0] - top_bits
+        prefix = (words[:, 0] >> shift).astype(jnp.int32)
+        counts = jnp.zeros((1 << top_bits,), jnp.int32).at[prefix].add(1)
+        cut = jnp.searchsorted(jnp.cumsum(counts), k, side="left")
+        rows = jnp.nonzero(prefix <= cut)[0].astype(jnp.int32)  # host sync
+        if rows.shape[0] < n:
+            # the candidate subset re-resolves its own (tuned) plans:
+            # caller-pinned plans were sized for n rows, not ~k
+            _, sub = sort_rowids(words[rows], codec.bits)
+            return table.take(rows[sub[:k]])
+    _, rowids = sort_rowids(words, codec.bits, plans)
+    return table.take(rowids[:k])
 
 
 def _segments(sorted_words: jnp.ndarray) -> np.ndarray:
@@ -136,13 +216,14 @@ def _segments(sorted_words: jnp.ndarray) -> np.ndarray:
 
 
 def distinct(table: Table, by=None,
-             codecs: Optional[Mapping[str, Codec]] = None) -> Table:
+             codecs: Optional[Mapping[str, Codec]] = None,
+             plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
     """DISTINCT ON the key columns: the first-arriving row of every
     distinct key combination, output sorted by key (the stable pairs sort
     makes "first" well-defined)."""
     by = _normalize_by(by if by is not None else table.column_names)
     codec, words = _composite_for(table, by, codecs)
-    sorted_words, rowids = sort_rowids(words, codec.bits)
+    sorted_words, rowids = sort_rowids(words, codec.bits, plans)
     starts = _segments(sorted_words)
     return table.take(jnp.asarray(np.asarray(rowids)[starts]))
 
@@ -152,7 +233,8 @@ _AGG_UFUNC = {"sum": np.add, "min": np.minimum, "max": np.maximum}
 
 
 def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
-             codecs: Optional[Mapping[str, Codec]] = None) -> Table:
+             codecs: Optional[Mapping[str, Codec]] = None,
+             plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
     """GROUP BY + aggregation from segment boundaries of the sorted key.
 
     One pairs sort groups equal keys into contiguous segments; every
@@ -163,7 +245,7 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
     """
     by = _normalize_by(by)
     codec, words = _composite_for(table, by, codecs)
-    sorted_words, rowids = sort_rowids(words, codec.bits)
+    sorted_words, rowids = sort_rowids(words, codec.bits, plans)
     starts = _segments(sorted_words)
     rid = np.asarray(rowids)
     n = rid.shape[0]
@@ -190,7 +272,8 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
 
 def sort_merge_join(left: Table, right: Table, on,
                     codecs: Optional[Mapping[str, Codec]] = None,
-                    suffixes: Tuple[str, str] = ("_l", "_r")) -> Table:
+                    suffixes: Tuple[str, str] = ("_l", "_r"),
+                    plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
     """Inner join over two fractal-sorted runs.
 
     Both sides' key columns encode through the *same* composite codec
@@ -202,6 +285,9 @@ def sort_merge_join(left: Table, right: Table, on,
 
     Join keys must encode into one 32-bit word (``codec.bits <= 32``);
     wider keys are an open item (lexicographic multi-word merge).
+    ``plans`` (single-element tuple — one word) applies to *both* sides'
+    sorts; leave it None when the two tables differ widely in size so
+    each side resolves its own tuned plan.
     """
     by = _normalize_by(on)
     for name, asc in by:
@@ -216,8 +302,8 @@ def sort_merge_join(left: Table, right: Table, on,
     assert codec_l.bits <= 32, (
         f"join keys encode to {codec_l.bits} bits > 32: multi-word merge "
         "is an open item — narrow the key codecs")
-    lc, lrid = sort_rowids(words_l, codec_l.bits)
-    rc, rrid = sort_rowids(words_r, codec_r.bits)
+    lc, lrid = sort_rowids(words_l, codec_l.bits, plans)
+    rc, rrid = sort_rowids(words_r, codec_r.bits, plans)
     lc, rc = lc[:, 0], rc[:, 0]
     lo = jnp.searchsorted(rc, lc, side="left")
     hi = jnp.searchsorted(rc, lc, side="right")

@@ -1,0 +1,175 @@
+"""autotune_plan / tuned_plan: measured winners are cached (memory +
+disk), cache hits never re-measure, the no-cache default is exactly the
+static plan, and every sort entry point accepts pinned plans."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    DEFAULT_MAX_BINS_LOG2,
+    autotune_plan,
+    fractal_argsort,
+    fractal_sort,
+    fractal_sort_batched,
+    fractal_sort_pairs,
+    make_sort_plan,
+    pass_cost,
+    pick_engine,
+    plan_cost,
+    scatter_tile_len,
+    tuned_plan,
+)
+from repro.core import autotune as at
+
+
+@pytest.fixture
+def cache_path(tmp_path):
+    """A fresh cache file per test, with the process-level caches cleared
+    so disk behavior is actually exercised."""
+    at._FILE_CACHE.clear()
+    at._MEM_CACHE.clear()
+    yield str(tmp_path / "autotune.json")
+    at._FILE_CACHE.clear()
+    at._MEM_CACHE.clear()
+
+
+@pytest.fixture
+def count_measures(monkeypatch):
+    """Wrap the measurement primitive with a call counter (cheap repeat=1
+    so sweeps stay fast in tests)."""
+    calls = []
+    orig = at._measure_plan
+
+    def counting(n, p, plan, backend, repeat=1):
+        calls.append((n, p, plan.describe()))
+        return orig(n, p, plan, backend, repeat=1)
+
+    monkeypatch.setattr(at, "_measure_plan", counting)
+    return calls
+
+
+def test_autotune_measures_once_then_hits_cache(cache_path, count_measures):
+    n, p = 4096, 16
+    plan1 = autotune_plan(n, p, cache_path=cache_path,
+                          widths=(4, 8), engines=("onehot", "scatter"))
+    measured = len(count_measures)
+    assert measured == 4, "2 widths x 2 engines"
+    # same shape bucket: hit, zero new measurements
+    plan2 = autotune_plan(n, p, cache_path=cache_path,
+                          widths=(4, 8), engines=("onehot", "scatter"))
+    assert len(count_measures) == measured
+    assert plan2 == plan1
+    # a different n in the same power-of-two bucket also hits, with the
+    # winner re-instantiated for the exact n
+    plan3 = autotune_plan(n - 7, p, cache_path=cache_path)
+    assert len(count_measures) == measured
+    assert plan3.p == p and plan3.n == n - 7
+    assert {dp.engine for dp in plan3.passes} == \
+        {dp.engine for dp in plan1.passes}
+
+
+def test_autotune_cache_persists_to_disk(cache_path, count_measures):
+    n, p = 4096, 16
+    plan1 = autotune_plan(n, p, cache_path=cache_path, widths=(4, 8))
+    measured = len(count_measures)
+    with open(cache_path) as f:
+        data = json.load(f)
+    (key,) = data.keys()
+    assert at.host_key() in key and f"p{p}" in key
+    entry = data[key]
+    assert entry["engine"] in ("onehot", "scatter")
+    assert len(entry["sweep"]) == measured, "full sweep recorded"
+    # a cold process (cleared in-memory caches) resolves from disk only
+    at._FILE_CACHE.clear()
+    at._MEM_CACHE.clear()
+    plan2 = autotune_plan(n, p, cache_path=cache_path)
+    assert len(count_measures) == measured
+    assert plan2 == plan1
+
+
+def test_autotune_force_remeasures(cache_path, count_measures):
+    autotune_plan(4096, 16, cache_path=cache_path, widths=(4,),
+                  engines=("onehot",))
+    assert len(count_measures) == 1
+    autotune_plan(4096, 16, cache_path=cache_path, widths=(4,),
+                  engines=("onehot",), force=True)
+    assert len(count_measures) == 2
+
+
+def test_tuned_plan_never_measures(cache_path, monkeypatch):
+    def boom(*a, **k):
+        raise AssertionError("tuned_plan must not measure")
+
+    monkeypatch.setattr(at, "_measure_plan", boom)
+    n, p = 1 << 14, 32
+    plan = tuned_plan(n, p, cache_path=cache_path)
+    assert plan == make_sort_plan(n, p), \
+        "cache miss must fall back to the static default plan"
+
+
+def test_tuned_plan_resolves_recorded_winner(cache_path, count_measures):
+    n, p = 4096, 12
+    won = autotune_plan(n, p, cache_path=cache_path, widths=(6,),
+                        engines=("scatter",))
+    got = tuned_plan(n, p, cache_path=cache_path)
+    assert got == won
+    assert all(dp.engine == "scatter" for dp in got.passes)
+
+
+def test_entry_points_accept_pinned_plans(rng):
+    """plan= must reach every entry point unchanged (zero API breakage:
+    the old signatures still work, the new static arg pins execution)."""
+    n, p = 2048, 16
+    keys = rng.integers(0, 1 << p, n).astype(np.int32)
+    arr = jnp.asarray(keys)
+    plan = make_sort_plan(n, p, max_bins_log2=8, engine="scatter")
+    np.testing.assert_array_equal(
+        np.asarray(fractal_sort(arr, p, plan=plan)), np.sort(keys))
+    perm = fractal_argsort(arr, p, plan=plan)
+    np.testing.assert_array_equal(np.asarray(perm),
+                                  np.argsort(keys, kind="stable"))
+    vals = jnp.arange(n, dtype=jnp.int32)
+    sk, sv = fractal_sort_pairs(arr, vals, p, plan=plan)
+    np.testing.assert_array_equal(np.asarray(sv),
+                                  np.argsort(keys, kind="stable"))
+    streamed, _ = fractal_sort_batched(arr, p, 4, plan=plan)
+    np.testing.assert_array_equal(np.asarray(streamed), np.sort(keys))
+    with pytest.raises(AssertionError):
+        fractal_sort(arr, 12, plan=plan)  # plan/p mismatch is loud
+
+
+def test_candidate_grid_respects_key_width():
+    grid = at.candidate_grid(9)
+    assert all(w <= 9 for w, _ in grid)
+    assert {e for _, e in grid} == {"onehot", "scatter"}
+    assert (9, "scatter") in grid, "full-width single pass is a candidate"
+
+
+def test_cost_model_shape():
+    """The analytic model must (a) grow one-hot cost with width, (b) keep
+    scatter width-insensitive below the table regime, (c) cross over —
+    wide digits pick scatter, very narrow pick one-hot."""
+    n = 1 << 15
+    assert pass_cost(n, 11, "onehot") > 16 * pass_cost(n, 4, "onehot")
+    assert pass_cost(n, 11, "scatter") < 2 * pass_cost(n, 4, "scatter")
+    assert pick_engine(n, 2) == "onehot"
+    assert pick_engine(n, 11) == "scatter"
+    wide = make_sort_plan(n, 32, max_bins_log2=11, engine="scatter")
+    narrow = make_sort_plan(n, 32, max_bins_log2=4, engine="onehot")
+    assert plan_cost(wide) < plan_cost(narrow)
+    # scatter tiles grow with the digit (the one-hot chunk hint shrinks)
+    assert scatter_tile_len(1 << 11) >= scatter_tile_len(1 << 4)
+
+
+def test_default_resolution_matches_static_plan_without_cache(
+        cache_path, monkeypatch, rng):
+    """With an empty cache the default fractal_sort plan is byte-for-byte
+    the historical DEFAULT_MAX_BINS_LOG2 plan (zero behavior drift)."""
+    monkeypatch.setenv(at.CACHE_ENV, cache_path)
+    n, p = 1024, 16
+    assert tuned_plan(n, p) == make_sort_plan(n, p)
+    assert tuned_plan(n, p).passes[-1].bits <= DEFAULT_MAX_BINS_LOG2

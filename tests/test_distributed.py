@@ -60,6 +60,33 @@ def test_distributed_sort_distributions():
     assert "DIST_SORT_OK" in out
 
 
+def test_distributed_wide_field_scatter_rank():
+    """The paper's ICI scheme (one all_to_all per 16-bit field,
+    max_bins_log2=16): the per-device local rank of the 2**16-bin field
+    now routes through the scatter engine — exact placement and stable
+    argsort must survive the engine swap under shard_map."""
+    out = _run("""
+        from repro.core import (distributed_fractal_argsort,
+                                distributed_fractal_sort)
+        rng = np.random.default_rng(3)
+        k32 = rng.integers(0, 1 << 32, 1 << 12, dtype=np.uint64).astype(np.uint32)
+        ks = jax.device_put(jnp.asarray(k32), NamedSharding(mesh8, P("data")))
+        got, ov = distributed_fractal_sort(ks, mesh8, "data", 32,
+                                           max_bins_log2=16)
+        assert not bool(ov)
+        assert np.array_equal(np.asarray(got), np.sort(k32))
+        dup = rng.choice([7, 9, 1 << 20], 1 << 12).astype(np.uint32)
+        ds = jax.device_put(jnp.asarray(dup, jnp.uint32),
+                            NamedSharding(mesh8, P("data")))
+        perm, ov = distributed_fractal_argsort(ds, mesh8, "data", 32,
+                                               max_bins_log2=16)
+        assert not bool(ov)
+        assert np.array_equal(np.asarray(perm), np.argsort(dup, kind="stable"))
+        print("DIST_WIDE_OK")
+    """)
+    assert "DIST_WIDE_OK" in out
+
+
 def test_compressed_psum_error_feedback():
     out = _run("""
         import functools

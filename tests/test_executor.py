@@ -1,7 +1,8 @@
-"""PlanExecutor / PassBackend: chunk-parallel rank vs the serial-scan
-oracle, backend equivalence (jnp == pallas-interpret == distributed on a
-1-device mesh), the segment-aware grouped-trailing mode, and the
-empty-input guard."""
+"""PlanExecutor / PassBackend: the chunk-parallel one-hot and sorted-tile
+scatter rank engines vs the serial-scan oracle, backend equivalence
+(jnp == pallas-interpret == distributed on a 1-device mesh) including
+mixed per-pass engine hints, the segment-aware grouped-trailing mode,
+the distributed overflow per-run reset, and the empty-input guard."""
 
 import numpy as np
 import jax
@@ -14,11 +15,14 @@ except ImportError:  # container without hypothesis: deterministic shim
     from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
+    DigitPass,
     JnpBackend,
     PallasBackend,
     PlanExecutor,
+    SortPlan,
     fractal_argsort,
     fractal_rank,
+    fractal_rank_scatter,
     fractal_rank_serial,
     fractal_sort,
     fractal_sort_batched,
@@ -26,8 +30,14 @@ from repro.core import (
     make_sort_plan,
 )
 
+# Both parallel engines are property-tested against the same serial-scan
+# oracle: same contract, one-hot vs sorted-tile arithmetic.
+ENGINES = [("onehot", fractal_rank), ("scatter", fractal_rank_scatter)]
+ENGINE_IDS = [name for name, _ in ENGINES]
+ENGINE_FNS = [fn for _, fn in ENGINES]
 
-# --- chunk-parallel rank == serial-scan oracle -------------------------------
+
+# --- parallel rank engines == serial-scan oracle -----------------------------
 
 
 def _assert_rank_triples_equal(a, b, ctx):
@@ -36,19 +46,22 @@ def _assert_rank_triples_equal(a, b, ctx):
                                       err_msg=str(ctx))
 
 
+@pytest.mark.parametrize("engine", ENGINE_FNS, ids=ENGINE_IDS)
 @pytest.mark.parametrize("n", [1, 17, 63, 64, 65, 1000, 4097])
 @pytest.mark.parametrize("n_bins", [2, 16, 256])
-def test_parallel_rank_matches_serial_across_chunk_boundaries(rng, n, n_bins):
-    """Non-divisible sizes: chunk (batch=64) and group boundaries land
-    mid-stream; the carry handoff must be exact at every boundary."""
+def test_parallel_rank_matches_serial_across_chunk_boundaries(
+        rng, engine, n, n_bins):
+    """Non-divisible sizes: chunk/tile (batch=64) and group boundaries
+    land mid-stream; the carry handoff must be exact at every boundary."""
     d = jnp.asarray(rng.integers(0, n_bins, n).astype(np.int32))
     _assert_rank_triples_equal(
-        fractal_rank(d, n_bins, batch=64),
+        engine(d, n_bins, batch=64),
         fractal_rank_serial(d, n_bins, batch=64), (n, n_bins))
 
 
+@pytest.mark.parametrize("engine", ENGINE_FNS, ids=ENGINE_IDS)
 @pytest.mark.parametrize("dist", ["all_equal", "two_hot", "ramp"])
-def test_parallel_rank_matches_serial_adversarial(rng, dist):
+def test_parallel_rank_matches_serial_adversarial(rng, engine, dist):
     n, n_bins = 5000, 16
     if dist == "all_equal":
         d = np.full(n, 7, np.int32)
@@ -57,21 +70,22 @@ def test_parallel_rank_matches_serial_adversarial(rng, dist):
     else:
         d = (np.arange(n) % n_bins).astype(np.int32)
     d = jnp.asarray(d)
-    _assert_rank_triples_equal(fractal_rank(d, n_bins, batch=128),
+    _assert_rank_triples_equal(engine(d, n_bins, batch=128),
                                fractal_rank_serial(d, n_bins, batch=128),
                                dist)
 
 
-def test_parallel_rank_streaming_carry_and_bin_start(rng):
+@pytest.mark.parametrize("engine", ENGINE_FNS, ids=ENGINE_IDS)
+def test_parallel_rank_streaming_carry_and_bin_start(rng, engine):
     """carry_in/bin_start injection (the streaming + distributed modes)
-    must thread identically through both engines."""
+    must thread identically through every engine."""
     n_bins = 16
     d = jnp.asarray(rng.integers(0, n_bins, 3000).astype(np.int32))
     ci = jnp.asarray(rng.integers(0, 50, n_bins).astype(np.int32))
     bs = jnp.asarray(rng.integers(0, 100, n_bins).astype(np.int32))
     for kw in ({"carry_in": ci}, {"bin_start": bs},
                {"carry_in": ci, "bin_start": bs}):
-        _assert_rank_triples_equal(fractal_rank(d, n_bins, batch=64, **kw),
+        _assert_rank_triples_equal(engine(d, n_bins, batch=64, **kw),
                                    fractal_rank_serial(d, n_bins, batch=64,
                                                        **kw), list(kw))
 
@@ -82,10 +96,23 @@ def test_parallel_rank_streaming_carry_and_bin_start(rng):
 def test_parallel_rank_property(n, batch, n_bins):
     rng = np.random.default_rng(n * 13 + batch + n_bins)
     d = jnp.asarray(rng.integers(0, n_bins, n).astype(np.int32))
-    got = fractal_rank(d, n_bins, batch=batch)
     want = fractal_rank_serial(d, n_bins, batch=batch)
-    for g, w in zip(got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    for _, engine in ENGINES:
+        got = engine(d, n_bins, batch=batch)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_scatter_rank_wide_bins_both_hist_paths(rng):
+    """The scatter engine switches between searchsorted boundary probes
+    (narrow digits) and the flat bincount (wide digits); both must match
+    the oracle — including bin counts the probes must not truncate."""
+    n = 3000
+    for n_bins, batch in [(2048, 4096), (4096, 256), (65536, 8192)]:
+        d = jnp.asarray(rng.integers(0, n_bins, n).astype(np.int32))
+        _assert_rank_triples_equal(
+            fractal_rank_scatter(d, n_bins, batch=batch),
+            fractal_rank_serial(d, n_bins, batch=batch), (n_bins, batch))
 
 
 # --- backend equivalence over the same plans ---------------------------------
@@ -106,6 +133,52 @@ def test_jnp_and_pallas_backends_agree(rng, n, p, w):
     for got in (via_jnp, via_pallas):
         np.testing.assert_array_equal(
             np.asarray(got).astype(np.uint32).astype(np.uint64), want)
+
+
+def test_jnp_and_pallas_backends_agree_mixed_engine_hints(rng):
+    """A plan whose passes carry *mixed* engine hints (onehot, scatter,
+    and cost-model auto) must sort identically through both single-host
+    backends — hints are execution metadata, never semantics."""
+    n, p = 4096, 32
+    keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32)
+    arr = jnp.asarray(keys, jnp.uint32)
+    base = make_sort_plan(n, p, max_bins_log2=8)
+    hints = ["scatter", "onehot", None, "scatter"]
+    plan = SortPlan(n=n, p=p, passes=tuple(
+        DigitPass(shift=dp.shift, bits=dp.bits, kind=dp.kind, engine=e)
+        for dp, e in zip(base.passes, hints)))
+    want = np.sort(keys.astype(np.uint64))
+    for backend in (JnpBackend(), PallasBackend(interpret=True)):
+        got = PlanExecutor(backend).run(arr, plan)
+        np.testing.assert_array_equal(
+            np.asarray(got).astype(np.uint32).astype(np.uint64), want,
+            err_msg=str(backend))
+    # pairs mode too: payload must ride identically under mixed hints
+    vals = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+    order = np.argsort(keys, kind="stable")
+    for backend in (JnpBackend(), PallasBackend(interpret=True)):
+        sk, sv = PlanExecutor(backend).run_pairs(arr, vals, plan)
+        np.testing.assert_array_equal(np.asarray(sv),
+                                      np.asarray(vals)[order],
+                                      err_msg=str(backend))
+
+
+@pytest.mark.parametrize("engine", ["onehot", "scatter"])
+def test_engine_hinted_plans_sort_correctly(rng, engine):
+    """Whole-plan engine stamps (what `autotune_plan` records) across
+    widths, including the paper's 16-bit field under the scatter engine —
+    the plan the one-hot engine could never execute in reasonable time."""
+    for n, p, w in [(3000, 16, 8), (2048, 32, 11), (2048, 32, 16)]:
+        if engine == "onehot" and w == 16:
+            continue  # the O(n * 2**16) tile: exactly what scatter removes
+        keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(np.uint32)
+        arr = jnp.asarray(keys, jnp.uint32 if p == 32 else jnp.int32)
+        got = fractal_sort(arr, p,
+                           plan=make_sort_plan(n, p, max_bins_log2=w,
+                                               engine=engine))
+        np.testing.assert_array_equal(
+            np.asarray(got).astype(np.uint32).astype(np.uint64),
+            np.sort(keys.astype(np.uint64)), err_msg=f"{n},{p},{w}")
 
 
 def test_distributed_backend_agrees_on_single_device_mesh(rng):
@@ -262,6 +335,49 @@ def test_batched_wide_plan_falls_back_to_full_plan(rng):
     streamed, _ = fractal_sort_batched(jnp.asarray(keys, jnp.uint32), 32, 4,
                                        max_bins_log2=16)
     np.testing.assert_array_equal(np.asarray(streamed), np.sort(keys))
+
+
+# --- distributed overflow resets between runs --------------------------------
+
+
+def test_distributed_overflow_resets_between_runs(rng):
+    """Regression: ``DistributedBackend.overflow`` accumulated across runs
+    when an executor was reused — a second, clean run reported the first
+    run's overflow forever.  ``begin_run`` must reset it: run 1 (64 keys
+    through capacity-32 buckets on one device) overflows, run 2 (16 keys)
+    must not."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+    from repro.compat import make_mesh
+    from repro.core import DistributedBackend
+
+    mesh = make_mesh((1,), ("data",))
+    n1, n2, cap = 64, 16, 32
+    plan1, plan2 = make_sort_plan(n1, 8), make_sort_plan(n2, 8)
+
+    def body(a, b):
+        backend = DistributedBackend(axis="data", capacity=cap, batch=32)
+        ex = PlanExecutor(backend)
+        out1 = ex.run(a, plan1)
+        ov1 = backend.overflow
+        out2 = ex.run(b, plan2)
+        ov2 = backend.overflow
+        return out1, ov1, out2, ov2
+
+    a = jax.device_put(jnp.asarray(rng.integers(0, 256, n1), jnp.int32),
+                       NamedSharding(mesh, P("data")))
+    b = jax.device_put(jnp.asarray(rng.integers(0, 256, n2), jnp.int32),
+                       NamedSharding(mesh, P("data")))
+    out1, ov1, out2, ov2 = compat.shard_map(
+        body, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=(P("data"), P(), P("data"), P()))(a, b)
+    # on one device every key targets bucket 0: run 1 overflows (64 > 32,
+    # flagged + dropped), run 2 fits and must report clean
+    assert bool(ov1)
+    assert not bool(ov2), "overflow leaked across executor runs"
+    np.testing.assert_array_equal(np.asarray(out2),
+                                  np.sort(np.asarray(b)))
 
 
 # --- empty-input guard -------------------------------------------------------

@@ -51,6 +51,30 @@ def test_rank_sweep(rng, n, n_bins):
         np.asarray(ref.rank_ref(keys, start, n_bins)))
 
 
+@pytest.mark.parametrize("n,n_bins,block", [(512, 8, 64), (1000, 64, 256),
+                                            (4096, 256, 1024),
+                                            (777, 2048, 128)])
+def test_rank_scatter_kernel_matches_onehot_kernel(rng, n, n_bins, block):
+    """Engine parity at the kernel layer: the sorted-composite scatter
+    kernel and the one-hot kernel must emit identical ranks from
+    identical bin starts (including across block/carry boundaries)."""
+    from repro.kernels.fractal_rank import (fractal_rank_kernel,
+                                            fractal_rank_scatter_kernel)
+
+    keys = jnp.asarray(rng.integers(0, n_bins, n), jnp.int32)
+    counts = ref.histogram_ref(keys, n_bins)
+    start = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                             jnp.cumsum(counts)[:-1]])
+    got = fractal_rank_scatter_kernel(keys, start, n_bins, block=block)
+    want = fractal_rank_kernel(keys, start, n_bins, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and both realize the stable counting-sort permutation
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.argsort(np.argsort(np.asarray(keys), kind="stable"),
+                   kind="stable"))
+
+
 @pytest.mark.parametrize("n,n_bins,t", [(1000, 128, 0), (2048, 64, 4),
                                         (513, 16, 2)])
 def test_reconstruct_sweep(rng, n, n_bins, t):

@@ -384,3 +384,116 @@ def test_infer_codec_widths(rng):
     assert infer_codec(np.zeros(3, np.int32), bits=9).bits == 9
     with pytest.raises(AssertionError):
         infer_codec(np.zeros(3, np.complex64))
+
+
+# --- top_k MSD-histogram pruning ---------------------------------------------
+
+
+@pytest.mark.parametrize("dist", ["uniform", "all_equal", "skew_low",
+                                  "boundary_ties"])
+def test_top_k_pruned_equals_full_sort_head(rng, dist):
+    """top_k prunes via the leading-digit histogram before sorting; the
+    result must equal order_by().head(k) exactly — rows, payload, and tie
+    order — on distributions that stress the cut bin."""
+    n = 4000
+    if dist == "uniform":
+        k_col = rng.integers(-5000, 5000, n).astype(np.int32)
+    elif dist == "all_equal":
+        k_col = np.full(n, 42, np.int32)  # every row lands in the cut bin
+    elif dist == "skew_low":
+        k_col = np.minimum(rng.zipf(1.3, n), 1 << 20).astype(np.int32)
+    else:  # exactly k-straddling ties at the boundary value
+        k_col = np.where(rng.random(n) < 0.5, 7, 9999).astype(np.int32)
+    t = Table({"k": k_col, "row": np.arange(n, dtype=np.int32),
+               "v": rng.standard_normal(n).astype(np.float32)})
+    for k in (1, 13, 500, n - 1, n, n + 10):
+        got = top_k(t, "k", k).to_numpy()
+        want = order_by(t, "k").head(k).to_numpy()
+        for col in ("k", "row", "v"):
+            assert np.array_equal(got[col], want[col]), (dist, k, col)
+
+
+def test_top_k_pruned_multiword_and_desc(rng):
+    """Pruning must hold on multi-word codes (the histogram reads the most
+    significant word) and under desc direction (bit-inverted codes)."""
+    n = 3000
+    t = Table({"d": rng.standard_normal(n).astype(np.float64),
+               "row": np.arange(n, dtype=np.int32)})
+    for by in ("d", [("d", "desc")]):
+        for k in (5, 250):
+            got = top_k(t, by, k).to_numpy()
+            want = order_by(t, by).head(k).to_numpy()
+            assert np.array_equal(got["row"], want["row"]), (by, k)
+            assert np.array_equal(got["d"], want["d"]), (by, k)
+
+
+def test_top_k_zero_and_negative_k(rng):
+    t = Table({"k": rng.integers(0, 9, 100).astype(np.int32)})
+    assert top_k(t, "k", 0).num_rows == 0
+    assert top_k(t, "k", -3).num_rows == 0
+
+
+# --- jit-cached sort_rowids chain + tuned/pinned plans -----------------------
+
+
+def test_rowid_chain_is_cached_across_calls(rng):
+    """The multi-word pass chain must trace once per (widths, plans)
+    config: repeated order_by calls on same-shaped float64 keys hit the
+    lru-cached jitted chain instead of re-dispatching per word."""
+    from repro.query.operators import _rowid_chain
+
+    n = 1500
+    t = Table({"d": rng.standard_normal(n).astype(np.float64)})
+    order_by(t, "d")
+    before = _rowid_chain.cache_info()
+    order_by(t, "d")
+    after = _rowid_chain.cache_info()
+    assert after.hits > before.hits, "second call must reuse the chain"
+    assert after.misses == before.misses
+
+
+def test_sort_rowids_accepts_pinned_plans(rng):
+    """Explicit per-word plans (the autotune output) must flow through the
+    chain and sort identically to the defaults."""
+    from repro.core import make_sort_plan
+
+    n = 2000
+    d = rng.standard_normal(n).astype(np.float64)
+    codec = infer_codec(d)
+    words = codec.encode(d)
+    plans = tuple(make_sort_plan(n, w, max_bins_log2=8, engine="scatter")
+                  for w in word_widths(codec.bits))
+    sw, rid = sort_rowids(words, codec.bits, plans)
+    sw0, rid0 = sort_rowids(words, codec.bits)
+    assert np.array_equal(np.asarray(rid), np.asarray(rid0))
+    assert np.array_equal(np.asarray(sw), np.asarray(sw0))
+    with pytest.raises(AssertionError, match="plans"):
+        sort_rowids(words, codec.bits, plans[:1])
+
+
+def test_codec_word_plans_resolve_per_word(rng):
+    """Codec.word_plans sizes one tuned plan per emitted word — the
+    codec-driven widths (not a global 32-bit default) reach the planner."""
+    spec = [ColumnSpec(IntCodec(32)), ColumnSpec(IntCodec(9))]
+    codec = CompositeCodec(spec)  # 41 bits -> words of 32 + 9
+    plans = codec.word_plans(4096)
+    assert [p.p for p in plans] == [32, 9]
+    assert all(p.n == 4096 for p in plans)
+
+
+def test_operators_accept_plans_kwarg(rng):
+    """Every operator must accept (and correctly apply) pinned plans."""
+    from repro.core import make_sort_plan
+
+    n = 1200
+    t = Table({"k": rng.integers(0, 100, n).astype(np.int32),
+               "v": rng.integers(0, 10, n).astype(np.int32)})
+    plans = (make_sort_plan(n, 32, max_bins_log2=8, engine="scatter"),)
+    want = order_by(t, "k").to_numpy()
+    got = order_by(t, "k", plans=plans).to_numpy()
+    assert np.array_equal(got["k"], want["k"])
+    assert np.array_equal(got["v"], want["v"])
+    assert group_by(t, "k", {"c": (None, "count")},
+                    plans=plans).num_rows == distinct(t, "k").num_rows
+    tk = top_k(t, "k", 17, plans=plans).to_numpy()
+    assert np.array_equal(tk["k"], want["k"][:17])
