@@ -1,0 +1,133 @@
+"""Out-of-core external sort: throughput vs the in-memory oracle, and the
+CI smoke guard.
+
+The paper's headline regime (512 MB–32 GB datasets) does not fit a CI
+runner, so the benchmark exercises the *shape* of that regime instead:
+datasets a fixed multiple (≥ 8×) of a small configured memory budget, so
+every pass — streamed histogram, distribution spill, per-partition sort,
+ordered emit — runs exactly as it would at scale, just on fewer bytes.
+
+Modes (``python -m benchmarks.bench_stream <mode>``):
+
+* (default) — external_sort at a few (n, budget) points: wall seconds,
+  keys/s, chunk count, peak resident bytes vs the budget, and the
+  in-memory ``jnp.sort`` oracle for the "cost of not fitting" ratio.
+* ``smoke`` — one ≥ 8×-budget point under a hard wall-clock budget with
+  an in-process correctness + budget assert, recorded to
+  ``BENCH_stream.json`` (schema 1, provenance-stamped like
+  ``BENCH_sort.json``) — the CI guard for the streaming subsystem.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row
+from repro.stream import ArraySource, MemoryBudget, external_sort
+from repro.stream.external import row_cost_bytes
+
+STREAM_JSON_SCHEMA = 1
+
+#: chunk sizing uses the subsystem's own single-word row-cost model, so
+#: the benchmark's budget ratio tracks external_sort's actual math
+_ROW_COST = row_cost_bytes(1)
+
+
+def _point(n: int, p: int, budget_bytes: int, check: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(
+        np.uint32).astype(np.int32 if p < 32 else np.uint32)
+    budget = MemoryBudget(budget_bytes)
+    src = ArraySource(keys, budget.rows(_ROW_COST))
+
+    t0 = time.perf_counter()
+    chunks = list(external_sort(src, p, budget))
+    wall = time.perf_counter() - t0
+    out = np.concatenate(chunks) if chunks else keys[:0]
+
+    karr = jnp.asarray(keys)
+    oracle = jax.jit(jnp.sort)
+    jax.block_until_ready(oracle(karr))
+    t0 = time.perf_counter()
+    jax.block_until_ready(oracle(karr))
+    oracle_wall = time.perf_counter() - t0
+
+    if check:
+        assert np.array_equal(out, np.sort(keys)), "external sort wrong"
+        assert budget.peak_bytes <= budget.limit_bytes, (
+            f"peak {budget.peak_bytes} B over the {budget.limit_bytes} B "
+            "budget")
+    return {
+        "n": n,
+        "p": p,
+        "budget_bytes": budget_bytes,
+        "dataset_bytes": int(keys.nbytes),
+        "ratio_to_budget": keys.nbytes / budget_bytes,
+        "chunks": len(chunks),
+        "wall_s": wall,
+        "keys_per_s": n / wall,
+        "peak_resident_bytes": budget.peak_bytes,
+        "oracle_wall_s": oracle_wall,
+    }
+
+
+def run():
+    for n, budget_kib in [(1 << 16, 32), (1 << 18, 128), (1 << 18, 32)]:
+        pt = _point(n, 32, budget_kib << 10)
+        row(f"stream/external_sort/n{n}/b{budget_kib}KiB", pt["wall_s"],
+            f"ratio_to_budget={pt['ratio_to_budget']:.0f}x "
+            f"chunks={pt['chunks']} "
+            f"oracle_us={pt['oracle_wall_s'] * 1e6:.0f} "
+            f"vs_oracle={pt['wall_s'] / pt['oracle_wall_s']:.1f}x")
+
+
+# Hard wall for the CI smoke point: a 2^18-key sort under a 128 KiB
+# budget (8x) finishes in well under a minute on the 2-core reference
+# host including jit traces; the budget leaves an order of magnitude
+# before a pass-loop or spill-path regression trips it.
+SMOKE_BUDGET_S = 150.0
+_SMOKE_N = 1 << 18
+_SMOKE_BUDGET_BYTES = _SMOKE_N * 4 // 8  # dataset = exactly 8x the budget
+
+
+def _provenance() -> dict:
+    from benchmarks.run import _provenance as prov
+
+    return prov()
+
+
+def smoke(path: str = "BENCH_stream.json") -> dict:
+    """One ≥ 8×-budget external sort under a hard wall: asserts
+    bit-exactness and the resident-bytes budget in-process, then records
+    the point (provenance-stamped) to ``BENCH_stream.json``."""
+    pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
+    row(f"stream/smoke/n{pt['n']}/b{pt['budget_bytes']}", pt["wall_s"],
+        f"budget_s={SMOKE_BUDGET_S} ratio={pt['ratio_to_budget']:.0f}x "
+        f"peak={pt['peak_resident_bytes']}B")
+    record = {
+        "schema": STREAM_JSON_SCHEMA,
+        "provenance": _provenance(),
+        "points": [pt],
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    if pt["wall_s"] > SMOKE_BUDGET_S:
+        raise SystemExit(
+            f"stream smoke point took {pt['wall_s']:.1f}s > "
+            f"{SMOKE_BUDGET_S}s budget: a streaming-path regression landed")
+    return record
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else None
+    if mode == "smoke":
+        smoke()
+    else:
+        run()

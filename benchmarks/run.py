@@ -12,6 +12,7 @@ trajectory is tracked across PRs.
   bench_bandwidth   Fig. 10               b_eff = T_actual / B_DRAM
   bench_sortplan    (beyond paper)        SortPlan digit-width sweep
   bench_query       (beyond paper)        query operators vs XLA oracle
+  bench_stream      (beyond paper)        out-of-core external sort
   bench_moe_dispatch  (beyond paper)      dispatch vs argsort
   roofline          assignment §Roofline  from dry-run artifacts
 
@@ -134,7 +135,8 @@ def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
 def main() -> None:
     from benchmarks import (bench_batches, bench_bandwidth, bench_latency,
                             bench_memory, bench_moe_dispatch, bench_query,
-                            bench_sortplan, bench_throughput, roofline)
+                            bench_sortplan, bench_stream, bench_throughput,
+                            roofline)
 
     only = sys.argv[1] if len(sys.argv) > 1 else None
     if only == "sort_json":
@@ -144,7 +146,8 @@ def main() -> None:
         "latency": bench_latency, "memory": bench_memory,
         "batches": bench_batches, "throughput": bench_throughput,
         "bandwidth": bench_bandwidth, "sortplan": bench_sortplan,
-        "query": bench_query, "moe_dispatch": bench_moe_dispatch,
+        "query": bench_query, "stream": bench_stream,
+        "moe_dispatch": bench_moe_dispatch,
         "roofline": roofline,
     }
     print("name,us_per_call,derived")

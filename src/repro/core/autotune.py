@@ -194,6 +194,11 @@ def autotune_plan(n: int, p: int, backend: str = "jnp",
     recorded winner violates re-sweeps (and re-records: the cache always
     holds the most recent sweep's winner for the key).
     """
+    if p == 0:
+        # zero-width keys: the identity plan — nothing to measure or
+        # cache (the external sort reaches this through recursive
+        # partitioning that has consumed every key bit).
+        return make_sort_plan(n, 0)
     path = cache_path or default_cache_path()
     bucket = shape_bucket(n)
     key = cache_key(backend, p, l_n, bucket)

@@ -117,6 +117,18 @@ class PassBackend:
         """
         raise NotImplementedError
 
+    def histogram(self, digit: jnp.ndarray, n_bins: int,
+                  init: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Bin counts of one digit stream; values outside ``[0, n_bins)``
+        (e.g. the ``n_bins`` chunk-padding sentinel) contribute nothing.
+        The histogram half of a pass, exposed on its own so streaming
+        consumers can accumulate counts across chunks without ranking —
+        ``init`` seeds the counts with the carry from previous chunks
+        (one fused scatter-add here; the Pallas kernel seeds its pinned
+        VMEM accumulator)."""
+        base = jnp.zeros((n_bins,), jnp.int32) if init is None else init
+        return base.at[digit].add(1, mode="drop")
+
     def scatter(self, rank: jnp.ndarray, *arrays: jnp.ndarray):
         """Place each array's elements at their ranks (payload carry)."""
         return tuple(jnp.zeros_like(a).at[rank].set(a) for a in arrays)
@@ -214,6 +226,12 @@ class PallasBackend(PassBackend):
                                    interpret=self.interpret,
                                    bin_start=bin_start, engine=engine)
 
+    def histogram(self, digit, n_bins, init=None):
+        from repro.kernels.fractal_histogram import fractal_histogram
+
+        return fractal_histogram(digit, n_bins, block=self.block,
+                                 interpret=self.interpret, init=init)
+
     def reconstruct(self, counts, trailing, plan):
         from repro.kernels.fractal_reconstruct import fractal_reconstruct_plan
 
@@ -287,8 +305,8 @@ class PlanExecutor:
         Algorithm-5 output dtype (int32/uint32 by ``plan.p``); others
         return the uint32 key stream — callers cast as needed."""
         self.backend.begin_run()
-        if keys.shape[0] == 0:
-            return keys
+        if keys.shape[0] == 0 or not plan.passes:
+            return keys  # empty input, or the p=0 identity plan
         u = keys.astype(jnp.uint32)
         for dp in plan.passes[:-1]:
             u = self.backend.lsd_pass(u, dp)
@@ -322,8 +340,8 @@ class PlanExecutor:
         order (stable), which is what the query operators lean on for
         multi-word keys and reproducible joins."""
         self.backend.begin_run()
-        if keys.shape[0] == 0:
-            return keys, values
+        if keys.shape[0] == 0 or not plan.passes:
+            return keys, values  # empty input, or the p=0 identity plan
         u = keys.astype(jnp.uint32)
         for dp in plan.passes[:-1]:
             u, values = self.backend.lsd_pass_pairs(u, (values,), dp)
@@ -351,12 +369,35 @@ class PlanExecutor:
         self.backend.begin_run()
         n = keys.shape[0]
         idx = jnp.arange(n, dtype=jnp.int32)
-        if n == 0:
-            return idx
+        if n == 0 or not plan.passes:
+            return idx  # p=0: all keys equal, stable perm is the identity
         u = keys.astype(jnp.uint32)
         for dp in plan.passes:
             u, idx = self.backend.lsd_pass_pairs(u, (idx,), dp)
         return idx
+
+    # -- per-chunk histogram accumulation (streaming consumers) --------------
+
+    def digit_counts(self, keys: jnp.ndarray, dp: DigitPass,
+                     init: Optional[jnp.ndarray] = None,
+                     pad_to: Optional[int] = None) -> jnp.ndarray:
+        """One chunk's histogram of ``dp``'s digit, accumulated onto
+        ``init`` — the hook the out-of-core subsystem
+        (:mod:`repro.stream`) streams a :class:`~repro.stream.ChunkSource`
+        through: one call per chunk, the running counts carried across
+        chunks exactly like the two-phase rank carries its per-chunk
+        histograms (paper §III.D, applied at dataset scale).
+
+        ``pad_to`` pads the digit stream with the out-of-range sentinel
+        ``dp.n_bins`` (dropped by every backend's histogram) so ragged
+        tail chunks keep one jit trace.
+        """
+        digit = _digit_of(keys.astype(jnp.uint32), dp)
+        if pad_to is not None and pad_to > digit.shape[0]:
+            digit = jnp.concatenate([
+                digit,
+                jnp.full((pad_to - digit.shape[0],), dp.n_bins, jnp.int32)])
+        return self.backend.histogram(digit, dp.n_bins, init=init)
 
     # -- segment-aware grouped-trailing mode --------------------------------
 
@@ -417,6 +458,8 @@ class PlanExecutor:
         from repro.core import fractal_tree as ft
 
         self.backend.begin_run()
+        if not plan.passes:
+            return keys, []  # the p=0 identity plan: nothing to histogram
         n = keys.shape[0]
         depth, t = plan.depth, plan.trailing_bits
         last = plan.passes[-1]

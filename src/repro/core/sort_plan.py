@@ -201,13 +201,14 @@ class SortPlan:
 
     @property
     def depth(self) -> int:
-        """Trie depth of the final (MSD/fractal) pass."""
-        return self.passes[-1].bits
+        """Trie depth of the final (MSD/fractal) pass (0 for the empty
+        ``p=0`` plan — nothing to rank)."""
+        return self.passes[-1].bits if self.passes else 0
 
     @property
     def trailing_bits(self) -> int:
         """Entry payload width of the final pass (bits below the prefix)."""
-        return self.passes[-1].shift
+        return self.passes[-1].shift if self.passes else 0
 
     @property
     def num_passes(self) -> int:
@@ -234,7 +235,7 @@ class SortPlan:
         return self.trailing_bits > 0 and self.grouped_table_log2 <= cap
 
     def describe(self) -> str:
-        return "+".join(f"{d.bits}b" for d in self.passes)
+        return "+".join(f"{d.bits}b" for d in self.passes) or "identity"
 
 
 def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
@@ -253,9 +254,18 @@ def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
 
     ``engine`` stamps every pass's rank-engine hint ("onehot"/"scatter";
     ``None`` leaves the choice to the executing backend's cost model).
+
+    Degenerate widths are legal and *skipped*, never executed: ``p = 0``
+    (every key is the zero-width value — the external sort reaches this
+    when recursive partitioning has consumed every key bit) yields the
+    empty identity plan (no passes; the executor returns its input
+    unchanged), and a zero-width trailing field never emits a 1-bin pass
+    — a single-bin pass ranks nothing and only burned a full scatter.
     """
-    assert 1 <= p <= 32, f"p={p} out of range (1..32)"
+    assert 0 <= p <= 32, f"p={p} out of range (0..32)"
     assert engine in (None, "onehot", "scatter"), f"unknown engine {engine!r}"
+    if p == 0:
+        return SortPlan(n=n, p=0, passes=())
     w_max = DEFAULT_MAX_BINS_LOG2 if max_bins_log2 is None else max_bins_log2
     assert 1 <= w_max <= 16, f"max_bins_log2={w_max} out of range (1..16)"
     if l_n is None:
@@ -274,8 +284,9 @@ def make_sort_plan(n: int, p: int, l_n: Optional[int] = None,
         shift = 0
         for i in range(num):
             bits = base + (1 if i < extra else 0)
-            passes.append(DigitPass(shift=shift, bits=bits, kind="lsd",
-                                    engine=engine))
+            if bits > 0:  # a zero-width field is a 1-bin no-op: skip it
+                passes.append(DigitPass(shift=shift, bits=bits, kind="lsd",
+                                        engine=engine))
             shift += bits
         assert shift == t
     passes.append(DigitPass(shift=t, bits=depth, kind="msd", engine=engine))

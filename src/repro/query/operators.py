@@ -28,6 +28,12 @@ counts); the data-sized work — every rank, scatter and gather — runs
 through the executor's jitted primitives.  No operator grows a pass
 loop: operators build plans, and the plan-pass loop stays solely in
 ``core/executor.py``.
+
+``order_by`` / ``group_by`` / ``top_k`` also accept a
+:class:`~repro.stream.table_ops.StreamTable` — a chunk-streamed table
+larger than its memory budget — and dispatch to the out-of-core
+subsystem (:mod:`repro.stream`), which routes each histogram partition
+back through these same in-memory primitives.
 """
 
 from __future__ import annotations
@@ -57,6 +63,17 @@ __all__ = [
     "top_k",
     "sort_rowids",
 ]
+
+def _stream_ops(table):
+    """The streaming-operator module when ``table`` is a StreamTable,
+    else None (imported lazily: the query layer must not pull the stream
+    subsystem in at import time)."""
+    if isinstance(table, Table):
+        return None
+    from repro.stream import table_ops
+
+    return table_ops if isinstance(table, table_ops.StreamTable) else None
+
 
 def _normalize_by(by) -> Tuple[Tuple[str, bool], ...]:
     """``by``: one "col", or a list of "col" / ("col", asc-bool) /
@@ -155,7 +172,16 @@ def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
              plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
     """Multi-column ORDER BY (stable): rows reordered by one gather of the
     pairs sort's row-id payload.  ``plans`` pins per-word sort plans
-    (default: the host's tuned plans for the codec's word widths)."""
+    (default: the host's tuned plans for the codec's word widths).
+
+    A StreamTable input runs out-of-core and returns a StreamTable of
+    sorted runs (:func:`~repro.stream.table_ops.stream_order_by`)."""
+    stream = _stream_ops(table)
+    if stream is not None:
+        assert plans is None, (
+            "pinned plans don't apply out-of-core: each partition "
+            "resolves tuned plans for its own length")
+        return stream.stream_order_by(table, by, codecs)
     codec, words = _composite_for(table, by, codecs)
     _, rowids = sort_rowids(words, codec.bits, plans)
     return table.take(rowids)
@@ -186,6 +212,12 @@ def top_k(table: Table, by, k: int,
     (k >= n, or no pruning opportunity); a pruned candidate subset
     re-resolves tuned plans for its own (smaller) length.
     """
+    stream = _stream_ops(table)
+    if stream is not None:
+        assert plans is None, (
+            "pinned plans don't apply out-of-core: each partition "
+            "resolves tuned plans for its own length")
+        return stream.stream_top_k(table, by, k, codecs)
     if k <= 0:
         return table.head(0)
     codec, words = _composite_for(table, by, codecs)
@@ -206,6 +238,38 @@ def top_k(table: Table, by, k: int,
     return table.take(rowids[:k])
 
 
+def _words_searchsorted(sorted_words: np.ndarray, queries: np.ndarray,
+                        side: str) -> np.ndarray:
+    """Lexicographic ``searchsorted`` of each query row into a sorted
+    ``(m, W)`` uint32 word matrix (word 0 most significant — the codec's
+    multi-word layout, where lexicographic == numeric on the full code).
+
+    Single words fall through to ``np.searchsorted``.  Wider codes use
+    the merge trick: stable-lexsort the concatenated (sorted ∪ query)
+    rows with a side-dependent tiebreak flag (queries before equal
+    sorted rows for "left", after for "right"); a query's insertion
+    index is then the count of sorted rows preceding it — one
+    O((m+n) log(m+n)) lexsort instead of a per-word bisection."""
+    m, n = sorted_words.shape[0], queries.shape[0]
+    if sorted_words.shape[1] == 1:
+        return np.searchsorted(sorted_words[:, 0], queries[:, 0], side=side)
+    assert side in ("left", "right")
+    flag_sorted = 1 if side == "left" else 0
+    comb = np.concatenate([sorted_words, queries])
+    flags = np.concatenate([
+        np.full((m,), flag_sorted, np.uint8),
+        np.full((n,), 1 - flag_sorted, np.uint8)])
+    # np.lexsort: LAST key is primary -> (flag, word W-1, ..., word 0)
+    order = np.lexsort((flags,) + tuple(
+        comb[:, j] for j in range(comb.shape[1] - 1, -1, -1)))
+    rank = np.empty((m + n,), np.int64)
+    rank[order] = np.arange(m + n)
+    sorted_rows_upto = np.cumsum(order < m)  # inclusive prefix of sorted rows
+    # a query row never counts itself, so the inclusive prefix at its
+    # sorted position is exactly the number of sorted rows before it
+    return sorted_rows_upto[rank[m:]]
+
+
 def _segments(sorted_words: jnp.ndarray) -> np.ndarray:
     """Start index of every run of equal codes in a sorted word matrix."""
     w = np.asarray(sorted_words)
@@ -221,6 +285,9 @@ def distinct(table: Table, by=None,
     """DISTINCT ON the key columns: the first-arriving row of every
     distinct key combination, output sorted by key (the stable pairs sort
     makes "first" well-defined)."""
+    assert isinstance(table, Table), (
+        "distinct is in-memory only; stream through order_by/group_by "
+        "(repro.stream) or materialize with StreamTable.to_table()")
     by = _normalize_by(by if by is not None else table.column_names)
     codec, words = _composite_for(table, by, codecs)
     sorted_words, rowids = sort_rowids(words, codec.bits, plans)
@@ -242,7 +309,16 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
     no hashing, no per-group loops (the Leyenda-style sort-based
     aggregation).  Output: one row per group, sorted by key; key columns
     decoded from the segment-start codes.
+
+    A StreamTable input aggregates out-of-core, partition by partition
+    (:func:`~repro.stream.table_ops.stream_group_by`).
     """
+    stream = _stream_ops(table)
+    if stream is not None:
+        assert plans is None, (
+            "pinned plans don't apply out-of-core: each partition "
+            "resolves tuned plans for its own length")
+        return stream.stream_group_by(table, by, aggs, codecs)
     by = _normalize_by(by)
     codec, words = _composite_for(table, by, codecs)
     sorted_words, rowids = sort_rowids(words, codec.bits, plans)
@@ -283,12 +359,18 @@ def sort_merge_join(left: Table, right: Table, on,
     into row-id pairs.  Output rows are sorted by key, ties ordered by
     (left arrival, right arrival): both sorts are stable.
 
-    Join keys must encode into one 32-bit word (``codec.bits <= 32``);
-    wider keys are an open item (lexicographic multi-word merge).
-    ``plans`` (single-element tuple — one word) applies to *both* sides'
-    sorts; leave it None when the two tables differ widely in size so
-    each side resolves its own tuned plan.
+    Keys of any codec width join: multi-word codes (float64, wide
+    composites) probe through the lexicographic merge
+    (:func:`_words_searchsorted`) over the ``(n, W)`` uint32 code
+    matrices — word order is numeric order, so duplicate and
+    cross-word-boundary ties behave exactly as one wide integer key.
+    ``plans`` (one per code word) applies to *both* sides' sorts; leave
+    it None when the two tables differ widely in size so each side
+    resolves its own tuned plan.
     """
+    assert isinstance(left, Table) and isinstance(right, Table), (
+        "sort_merge_join is in-memory only (a streaming join over "
+        "RunStore partitions is an open item)")
     by = _normalize_by(on)
     for name, asc in by:
         assert asc, "join keys have no direction; use plain column names"
@@ -299,15 +381,12 @@ def sort_merge_join(left: Table, right: Table, on,
         "join key columns must encode identically (same codec type and "
         "width per column) on both sides; pass an explicit shared codec "
         "via codecs=")
-    assert codec_l.bits <= 32, (
-        f"join keys encode to {codec_l.bits} bits > 32: multi-word merge "
-        "is an open item — narrow the key codecs")
     lc, lrid = sort_rowids(words_l, codec_l.bits, plans)
     rc, rrid = sort_rowids(words_r, codec_r.bits, plans)
-    lc, rc = lc[:, 0], rc[:, 0]
-    lo = jnp.searchsorted(rc, lc, side="left")
-    hi = jnp.searchsorted(rc, lc, side="right")
-    cnt = np.asarray(hi - lo)
+    lc, rc = np.asarray(lc), np.asarray(rc)
+    lo = _words_searchsorted(rc, lc, side="left")
+    hi = _words_searchsorted(rc, lc, side="right")
+    cnt = hi - lo
     total = int(cnt.sum())
     lpos = np.repeat(np.arange(cnt.shape[0]), cnt)
     seg_start = np.repeat(np.cumsum(cnt) - cnt, cnt)

@@ -1,0 +1,50 @@
+"""Out-of-core streaming sort subsystem: histogram-partitioned external
+sort over chunk streams.
+
+The paper's headline regime is 512 MB–32 GB datasets; every in-memory
+entry point needs the whole key array resident.  This package sorts
+datasets many times larger than a configurable byte budget by reusing the
+fractal compressed histogram as a distribution-adaptive MSD partitioner
+(no sampling pre-pass — the paper's no-preprocessing claim survives):
+
+* :mod:`~repro.stream.chunks` — the :class:`ChunkSource` protocol
+  (arrays, generator functions, on-disk :class:`RunStore` runs) and the
+  :class:`MemoryBudget` that sizes chunks from a byte cap;
+* :mod:`~repro.stream.partition` — one streamed histogram pass, then
+  greedy merging of adjacent bins into budget-fitting partitions
+  (recursive re-partition handles single-bin skew);
+* :mod:`~repro.stream.external` — :func:`external_sort` /
+  :func:`external_argsort`: each partition routes through the existing
+  :class:`~repro.core.executor.PlanExecutor`; partitions are disjoint
+  key ranges, so concatenation (not k-way merge) is the total order;
+* :mod:`~repro.stream.merge` — stable k-way merge of pre-sorted runs,
+  the pure-streaming path when a re-partition pass is not possible;
+* :mod:`~repro.stream.table_ops` — :class:`StreamTable` and the
+  streaming ``order_by`` / ``group_by`` / ``top_k`` the query operators
+  dispatch to.
+"""
+
+from repro.stream.chunks import (
+    ArraySource,
+    ChunkSource,
+    GeneratorSource,
+    MemoryBudget,
+    RunSource,
+    RunStore,
+)
+from repro.stream.partition import (
+    KeyPartition,
+    partition_bins,
+    streamed_field_counts,
+)
+from repro.stream.external import (
+    external_argsort,
+    external_sort,
+)
+from repro.stream.merge import merge_runs
+from repro.stream.table_ops import (
+    StreamTable,
+    stream_group_by,
+    stream_order_by,
+    stream_top_k,
+)

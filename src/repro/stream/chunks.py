@@ -1,0 +1,223 @@
+"""Chunk streams, the byte budget, and the on-disk run store.
+
+The out-of-core sort never holds more than a budgeted number of bytes of
+key/payload data resident: inputs arrive as a :class:`ChunkSource` (a
+re-iterable stream of budget-sized pieces), intermediate partition
+fragments and sorted runs spill to a numpy-backed :class:`RunStore`, and
+every sizing decision comes from one :class:`MemoryBudget`.
+
+The budget is also the subsystem's *allocation tracker*: every point that
+materializes key/payload arrays charges them (:meth:`MemoryBudget.charge`),
+so tests assert — not eyeball — that peak resident bytes stayed under the
+cap (the acceptance bar for the ≥ 8×-budget sort).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import weakref
+from typing import Callable, Iterator, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ArraySource",
+    "ChunkSource",
+    "GeneratorSource",
+    "MemoryBudget",
+    "RunSource",
+    "RunStore",
+]
+
+
+@dataclasses.dataclass
+class MemoryBudget:
+    """Byte cap on resident key/payload data, plus the peak tracker.
+
+    ``rows(bytes_per_row)`` is how every consumer sizes chunks and
+    partitions: the cap divided by the per-row byte cost, with a
+    ``headroom`` divisor (default 2) reserving room for the working copy
+    the sort pipeline inevitably makes of whatever is resident — digit
+    streams next to chunks, power-of-two padding next to partitions — so
+    *total* key/payload residency stays under ``limit_bytes`` even at
+    those moments.
+
+    ``charge(*arrays)`` records one moment's resident key/payload arrays;
+    ``peak_bytes`` is the high-water mark.  Charging never raises — the
+    budget is a contract the subsystem keeps by construction and tests
+    verify by reading the peak.
+    """
+
+    limit_bytes: int
+    headroom: int = 2
+    peak_bytes: int = dataclasses.field(default=0, compare=False)
+
+    def __post_init__(self):
+        assert self.limit_bytes >= 1, f"budget {self.limit_bytes} bytes"
+        assert self.headroom >= 1
+
+    def rows(self, bytes_per_row: int) -> int:
+        """Rows of ``bytes_per_row`` data a chunk/partition may hold."""
+        return max(1, self.limit_bytes
+                   // (self.headroom * max(int(bytes_per_row), 1)))
+
+    def charge(self, *arrays) -> int:
+        """Record simultaneously-resident key/payload arrays; returns the
+        moment's byte total and updates :attr:`peak_bytes`.  (``nbytes``
+        is read off the array object — numpy or jnp — never via a
+        copy.)"""
+        resident = sum(int(a.nbytes) for a in arrays if a is not None)
+        self.peak_bytes = max(self.peak_bytes, resident)
+        return resident
+
+
+class ChunkSource:
+    """A re-iterable stream of chunks (numpy arrays, or whatever item type
+    the consumer expects — :class:`~repro.stream.table_ops.StreamTable`
+    streams column dicts).
+
+    ``chunks()`` must return a *fresh* iterator each call: the external
+    sort streams a source twice (histogram pass, then distribution pass).
+    A one-shot stream should be spilled to a :class:`RunStore` first and
+    wrapped in a :class:`RunSource` — that is the
+    :func:`~repro.stream.merge.merge_runs` path.
+    """
+
+    def chunks(self) -> Iterator:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySource(ChunkSource):
+    """Budget-sized views over one in-memory array (the "the data fits
+    after all" and testing case — slices are views, nothing is copied)."""
+
+    array: np.ndarray
+    rows_per_chunk: int
+
+    def __post_init__(self):
+        assert self.rows_per_chunk >= 1
+
+    def chunks(self) -> Iterator[np.ndarray]:
+        a = np.asarray(self.array)
+        for lo in range(0, a.shape[0], self.rows_per_chunk):
+            yield a[lo:lo + self.rows_per_chunk]
+
+
+@dataclasses.dataclass(frozen=True)
+class GeneratorSource(ChunkSource):
+    """Chunks from a zero-argument callable returning a fresh iterator —
+    the "dataset is produced, not stored" case (each ``chunks()`` call
+    re-invokes the factory, so generation cost is paid per streaming
+    pass)."""
+
+    factory: Callable[[], Iterator[np.ndarray]]
+
+    def chunks(self) -> Iterator:
+        return iter(self.factory())
+
+
+class RunStore:
+    """Numpy-backed on-disk store of runs (each a tuple of arrays).
+
+    A *run* is whatever one spill wrote: a partition fragment (keys [+
+    payload columns]) or a finished sorted run.  Runs live as one ``.npy``
+    file per array under ``root`` (a private temp dir by default, removed
+    on :meth:`close`).  ``get(..., mmap=True)`` returns memory-maps, which
+    is how the k-way merge keeps k open runs resident only block by block.
+
+    Every access is logged (:attr:`put_log` / :attr:`get_log`) so tests
+    can assert what was — and crucially, what was *never* — loaded (the
+    ``top_k`` partition-pruning bar).
+    """
+
+    def __init__(self, root: Optional[str] = None):
+        self._own_root = root is None
+        self.root = root or tempfile.mkdtemp(prefix="repro-runstore-")
+        os.makedirs(self.root, exist_ok=True)
+        self._next_id = 0
+        self._widths: dict = {}  # run id -> number of arrays
+        self.put_log: list = []
+        self.get_log: list = []
+        if self._own_root:  # a private temp dir never outlives the store
+            self._cleanup = weakref.finalize(
+                self, shutil.rmtree, self.root, True)
+
+    def put(self, *arrays: np.ndarray) -> int:
+        """Spill one run (≥ 1 arrays); returns its run id."""
+        assert arrays, "a run holds at least one array"
+        rid = self._next_id
+        self._next_id += 1
+        for j, a in enumerate(arrays):
+            np.save(self._path(rid, j), np.ascontiguousarray(a),
+                    allow_pickle=False)
+        self._widths[rid] = len(arrays)
+        self.put_log.append(rid)
+        return rid
+
+    def get(self, rid: int, mmap: bool = False):
+        """Load one run back as a tuple of arrays (memory-maps with
+        ``mmap=True`` — resident page by page, the merge path's trick)."""
+        assert rid in self._widths, f"no run {rid} in store"
+        self.get_log.append(rid)
+        mode = "r" if mmap else None
+        return tuple(
+            np.load(self._path(rid, j), mmap_mode=mode, allow_pickle=False)
+            for j in range(self._widths[rid]))
+
+    def delete(self, rid: int) -> None:
+        for j in range(self._widths.pop(rid)):
+            try:
+                os.remove(self._path(rid, j))
+            except OSError:
+                pass
+
+    def run_ids(self) -> tuple:
+        return tuple(sorted(self._widths))
+
+    def nbytes(self) -> int:
+        """Total on-disk footprint of live runs."""
+        total = 0
+        for rid, width in self._widths.items():
+            for j in range(width):
+                try:
+                    total += os.path.getsize(self._path(rid, j))
+                except OSError:
+                    pass
+        return total
+
+    def close(self) -> None:
+        """Drop every run (and the store dir, if this store created it)."""
+        self._widths.clear()
+        if self._own_root:
+            self._cleanup()
+
+    def _path(self, rid: int, j: int) -> str:
+        return os.path.join(self.root, f"run{rid:08d}_{j}.npy")
+
+    def __len__(self) -> int:
+        return len(self._widths)
+
+    def __enter__(self) -> "RunStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSource(ChunkSource):
+    """Chunks from stored runs, in the given order.  Single-array runs
+    yield the bare array; multi-array runs yield the tuple (keys first —
+    the layout :func:`~repro.stream.external.external_argsort` spills)."""
+
+    store: RunStore
+    ids: Sequence[int]
+
+    def chunks(self) -> Iterator:
+        for rid in self.ids:
+            arrays = self.store.get(rid)
+            yield arrays[0] if len(arrays) == 1 else arrays

@@ -1,0 +1,363 @@
+"""External sort: budget-bounded sorting of datasets ≫ RAM.
+
+Three streaming passes, the classic distribution-sort shape driven by the
+fractal histogram instead of sampled splitters:
+
+1. **histogram** — one read of the :class:`~repro.stream.chunks.
+   ChunkSource`, accumulating the leading MSD field's counts across
+   chunks (:func:`~repro.stream.partition.streamed_field_counts`; one
+   executor ``digit_counts`` call per chunk, counts carried like the
+   two-phase rank's chunk histograms);
+2. **distribute** — a second read; each chunk's rows route to their
+   budget-fitting partition (:func:`~repro.stream.partition.
+   partition_bins`) and spill to the :class:`~repro.stream.chunks.
+   RunStore` as per-partition fragments, arrival order preserved;
+3. **sort-and-emit** — partitions load one at a time (they fit the
+   budget by prediction), sort through the existing
+   :class:`~repro.core.executor.PlanExecutor` pass chain
+   (:func:`~repro.query.operators.sort_rowids` — tuned plans, stable,
+   multi-word capable), and stream out.  Partitions are disjoint key
+   ranges, so concatenation *is* the stable total order — no k-way
+   merge (that path exists for pre-sorted runs in
+   :mod:`~repro.stream.merge`).
+
+A partition the histogram predicts oversized is always a single bin
+(greedy merging never overfills), so every key in it shares that bin's
+digit: the sort **recursively re-partitions** it on the next field down —
+the skew fallback — terminating at fully-equal keys, which stream out in
+arrival order (trivially sorted, stability free).
+
+Everything here operates on ``(n, W)`` uint32 code-word matrices (the
+query codec layout), so one core serves plain ≤ 32-bit keys
+(:func:`external_sort` / :func:`external_argsort`) and the StreamTable
+operators' arbitrarily wide composite codes.  In-memory partition sorts
+pad to the power-of-two ceiling with all-ones sentinel rows (they sort
+stably *after* every real row), so jit traces stay O(log budget) instead
+of one per ragged partition length.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import PlanExecutor
+from repro.core.fractal_tree import ceil_log2
+from repro.core.sort_plan import DigitPass
+from repro.query.codec import word_widths
+from repro.query.operators import sort_rowids
+from repro.stream.chunks import ChunkSource, MemoryBudget, RunStore
+from repro.stream.partition import (
+    DEFAULT_PARTITION_BITS,
+    bin_to_partition,
+    partition_bins,
+    streamed_field_counts,
+)
+
+__all__ = [
+    "external_argsort",
+    "external_sort",
+    "row_cost_bytes",
+    "stream_sorted_words",
+]
+
+
+def row_cost_bytes(num_words: int, payload_bytes: int = 0) -> int:
+    """Per-row byte cost the budget's ``rows()`` divides by, modeling the
+    *partition-sort moment* — the subsystem's residency peak.  There a
+    row's code words exist up to three times at up to 2× power-of-two
+    padding (host padded matrix + device input + device sorted output:
+    ``24 * num_words`` B/row), the padded row ids twice (device + host,
+    ~12 B/row), and each payload column twice (spilled + gathered).
+    ``MemoryBudget.rows()`` already halves for headroom, so the model
+    here carries half the worst case; :func:`_sort_in_memory` charges the
+    same moments to the tracker, keeping the asserted ``peak_bytes``
+    honest against this sizing."""
+    return 12 * num_words + 6 + payload_bytes
+
+
+def _extract_field(words: np.ndarray, bits: int, shift: int,
+                   width: int) -> np.ndarray:
+    """Code bits ``[shift, shift + width)`` (LSB-based) of every row of an
+    MSB-first ``(n, W)`` uint32 word matrix, as uint32 values.  The numpy
+    twin of :meth:`~repro.query.codec.CompositeCodec._extract`, offset
+    from the LSB because partitioning peels fields MSD→LSD."""
+    assert 0 < width <= 32 and shift + width <= bits
+    widths = word_widths(bits)
+    out = np.zeros((words.shape[0],), np.uint32)
+    off = bits  # walking MSB-first, word j covers [off - widths[j], off)
+    for j, wj in enumerate(widths):
+        off -= wj
+        lo = max(shift, off)
+        hi = min(shift + width, off + wj)
+        if lo >= hi:
+            continue
+        piece = (words[:, j] >> np.uint32(lo - off)) \
+            & np.uint32((1 << (hi - lo)) - 1)
+        out |= (piece << np.uint32(lo - shift)).astype(np.uint32)
+    return out
+
+
+def _sort_in_memory(words: np.ndarray, payloads: tuple, bits: int,
+                    budget: MemoryBudget):
+    """Stable in-memory sort of one partition through the executor pass
+    chain; rows padded to the power-of-two ceiling with all-ones codes
+    (greater-or-equal to every real code, arriving later → stably last),
+    so distinct partition lengths share O(log budget) jit traces."""
+    m = int(words.shape[0])
+    if m <= 1 or bits == 0:
+        return words, payloads
+    target = 1 << ceil_log2(m)
+    padded = words
+    if target > m:
+        padded = np.concatenate(
+            [words, np.full((target - m, words.shape[1]), 0xFFFFFFFF,
+                            np.uint32)])
+    # the sort moment: host padded matrix + its device copy + the device
+    # sorted output are simultaneously alive (charged as 3x padded)
+    budget.charge(padded, padded, padded, *payloads)
+    sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits)
+    sorted_words = np.asarray(sorted_words)[:m]
+    rowids = np.asarray(rowids)[:m]
+    # all-ones sentinels sort after every real row, so the first m sorted
+    # slots hold exactly the real rows
+    assert m == target or int(rowids.max(initial=-1)) < m
+    gathered = tuple(np.asarray(p)[rowids] for p in payloads)
+    budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
+    return sorted_words, gathered
+
+
+def _load_fragments(store: RunStore, frag_ids, n_payloads: int,
+                    budget: MemoryBudget):
+    """One partition back from its spilled fragments, arrival order."""
+    pieces = [store.get(rid) for rid in frag_ids]
+    words = np.concatenate([p[0] for p in pieces]) if pieces else \
+        np.zeros((0, 1), np.uint32)
+    payloads = tuple(
+        np.concatenate([p[1 + i] for p in pieces])
+        for i in range(n_payloads))
+    budget.charge(words, *payloads)
+    return words, payloads
+
+
+def stream_sorted_words(
+    chunks_fn: Callable[[], Iterator[tuple]],
+    bits: int,
+    budget: MemoryBudget,
+    store: RunStore,
+    row_bytes: int,
+    hi: Optional[int] = None,
+    executor: Optional[PlanExecutor] = None,
+    partition_bits: int = DEFAULT_PARTITION_BITS,
+    limit_rows: Optional[int] = None,
+) -> Iterator[Tuple[np.ndarray, tuple]]:
+    """The recursive external-sort core over ``(words, payloads)`` chunks.
+
+    ``chunks_fn`` is a re-iterable factory (called once for the histogram
+    pass, once for the distribution pass) yielding ``(words, payloads)``
+    tuples — ``words`` an ``(m, W)`` uint32 code matrix, ``payloads`` a
+    tuple of equal-length arrays riding along.  Yields the same shape in
+    global stable code order, every yielded chunk within the budget.
+
+    ``hi`` is the number of undetermined low code bits (every row already
+    shares bits ``[hi, bits)`` — the recursion invariant; level 0 streams
+    arrival order, which for fully-equal codes is the stable sorted
+    order).  ``limit_rows`` stops after that many rows *and prunes ahead
+    of the distribution pass*: partitions the histogram proves past the
+    limit are never spilled, let alone loaded — the top-k path.
+    """
+    hi = bits if hi is None else hi
+    emitted = 0
+
+    def room() -> Optional[int]:
+        return None if limit_rows is None else max(limit_rows - emitted, 0)
+
+    def clip(words, payloads):
+        r = room()
+        if r is not None and words.shape[0] > r:
+            return words[:r], tuple(p[:r] for p in payloads)
+        return words, payloads
+
+    if hi == 0:
+        # every code fully determined: arrival order is the stable sort
+        for words, payloads in chunks_fn():
+            budget.charge(words, *payloads)
+            words, payloads = clip(words, payloads)
+            if words.shape[0]:
+                yield words, payloads
+                emitted += int(words.shape[0])
+            if room() == 0:
+                return
+        return
+
+    w = min(partition_bits, hi)
+    dp = DigitPass(shift=0, bits=w)
+    n_payloads = None
+
+    def field_chunks():
+        nonlocal n_payloads
+        for words, payloads in chunks_fn():
+            if n_payloads is None:
+                n_payloads = len(payloads)
+            budget.charge(words, *payloads)
+            yield _extract_field(words, bits, hi - w, w)
+
+    counts, n_total = streamed_field_counts(field_chunks(), dp, executor)
+    if n_total == 0:
+        return
+    budget_rows = budget.rows(row_bytes)
+
+    if n_total <= budget_rows:
+        # the data fit after all: one in-memory sort, no spill
+        pieces = list(chunks_fn())
+        words = np.concatenate([p[0] for p in pieces])
+        payloads = tuple(np.concatenate([p[1][i] for p in pieces])
+                         for i in range(n_payloads))
+        words, payloads = _sort_in_memory(words, payloads, bits, budget)
+        words, payloads = clip(words, payloads)
+        if words.shape[0]:
+            yield words, payloads
+        return
+
+    partitions = list(partition_bins(counts, budget_rows))
+    if limit_rows is not None:
+        # histogram pruning: the first partitions whose cumulative count
+        # reaches the limit are the only ones top-k rows can live in
+        keep, cum = 0, 0
+        while keep < len(partitions) and cum < limit_rows:
+            cum += partitions[keep].count
+            keep += 1
+        partitions = partitions[:keep]
+    lut = bin_to_partition(tuple(partitions), 1 << w)
+
+    # distribution pass: route every row to its partition's fragment list
+    frag_ids: list = [[] for _ in partitions]
+    for words, payloads in chunks_fn():
+        budget.charge(words, *payloads)
+        digit = _extract_field(words, bits, hi - w, w).astype(np.int64)
+        pid = lut[digit]
+        order = np.argsort(pid, kind="stable")  # arrival kept within pid
+        pid_sorted = pid[order]
+        bounds = np.searchsorted(pid_sorted, np.arange(len(partitions) + 1))
+        for i in range(len(partitions)):
+            rows = order[bounds[i]:bounds[i + 1]]
+            if rows.shape[0]:
+                frag_ids[i].append(store.put(
+                    words[rows], *(p[rows] for p in payloads)))
+        # pid == -1 rows (pruned partitions) fall before bounds[0]: dropped
+
+    # sort-and-emit, partition (= key range) order
+    for part, frags in zip(partitions, frag_ids):
+        if room() == 0:
+            for rid in frags:
+                store.delete(rid)
+            continue
+        if not part.oversized(budget_rows):
+            words, payloads = _load_fragments(store, frags, n_payloads,
+                                              budget)
+            words, payloads = _sort_in_memory(words, payloads, bits, budget)
+            words, payloads = clip(words, payloads)
+            if words.shape[0]:
+                yield words, payloads
+                emitted += int(words.shape[0])
+        else:
+            # skew fallback: a single bin outgrew the budget; its keys all
+            # share that bin's digit, so recurse on the next field down
+            assert part.num_bins == 1, "only single bins can be oversized"
+            sub_fn = (lambda fr: lambda: (
+                (a[0], tuple(a[1:])) for a in
+                (store.get(rid) for rid in fr)))(frags)
+            for words, payloads in stream_sorted_words(
+                    sub_fn, bits, budget, store, row_bytes, hi=hi - w,
+                    executor=executor, partition_bits=partition_bits,
+                    limit_rows=room()):
+                yield words, payloads
+                emitted += int(words.shape[0])
+        for rid in frags:
+            store.delete(rid)
+
+
+def _key_chunks_fn(source: ChunkSource, with_rowids: bool):
+    """Adapt a 1-D key ChunkSource to the (words, payloads) protocol; the
+    cell returns the input dtype for casting sorted output back."""
+    dtype_cell: list = []
+
+    def chunks_fn():
+        offset = 0  # recomputed identically on every streaming pass
+        for chunk in source.chunks():
+            a = np.ascontiguousarray(np.asarray(chunk))
+            assert a.ndim == 1, "external_sort streams 1-D key chunks"
+            assert a.dtype.kind in "iu" and a.dtype.itemsize == 4, (
+                f"keys must be 32-bit integers (int32/uint32), got "
+                f"{a.dtype} — encode other types through repro.query "
+                "codecs (StreamTable order_by)")
+            if not dtype_cell:
+                dtype_cell.append(a.dtype)
+            words = a.view(np.uint32).reshape(-1, 1)
+            payloads = ()
+            if with_rowids:
+                payloads = (np.arange(offset, offset + a.shape[0],
+                                      dtype=np.int64),)
+            offset += a.shape[0]
+            yield words, payloads
+
+    return chunks_fn, dtype_cell
+
+
+def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
+                  store: Optional[RunStore] = None,
+                  executor: Optional[PlanExecutor] = None,
+                  partition_bits: int = DEFAULT_PARTITION_BITS,
+                  ) -> Iterator[np.ndarray]:
+    """Sort a streamed dataset of ``p``-bit keys under a byte budget.
+
+    ``source`` yields 1-D int32/uint32 key chunks (each within the
+    budget; :class:`~repro.stream.chunks.ArraySource` sized via
+    ``budget.rows(4)`` is the in-memory case) and must be re-iterable —
+    the sort streams it twice.  Yields sorted key chunks (input dtype) in
+    global order; peak resident key bytes stay under ``budget`` (tracked
+    — read ``budget.peak_bytes``).  ``store`` keeps spilled fragments
+    (own temp store by default, cleaned up when the generator finishes
+    or is closed).
+    """
+    assert 0 <= p <= 32, f"p={p} out of range (0..32)"
+    own_store = store is None
+    store = store or RunStore()
+    try:
+        chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=False)
+        for words, _ in stream_sorted_words(
+                chunks_fn, p, budget, store, row_cost_bytes(1),
+                executor=executor, partition_bits=partition_bits):
+            out = np.ascontiguousarray(words[:, 0])
+            yield out.view(dtype_cell[0]) if dtype_cell else out
+    finally:
+        if own_store:
+            store.close()
+
+
+def external_argsort(source: ChunkSource, p: int, budget: MemoryBudget,
+                     store: Optional[RunStore] = None,
+                     executor: Optional[PlanExecutor] = None,
+                     partition_bits: int = DEFAULT_PARTITION_BITS,
+                     ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Like :func:`external_sort`, but each yielded chunk is ``(sorted
+    keys, int64 global arrival indices)`` — the stable permutation, in
+    budget-sized pieces.  Row ids are assigned by stream position, ride
+    the spill fragments, and equal keys keep arrival order end to end
+    (fragments spill in arrival order, the in-partition pass chain is
+    stable, and fully-equal recursion levels stream arrival order)."""
+    assert 0 <= p <= 32, f"p={p} out of range (0..32)"
+    own_store = store is None
+    store = store or RunStore()
+    try:
+        chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=True)
+        for words, (rowids,) in stream_sorted_words(
+                chunks_fn, p, budget, store, row_cost_bytes(1, 8),
+                executor=executor, partition_bits=partition_bits):
+            out = np.ascontiguousarray(words[:, 0])
+            yield (out.view(dtype_cell[0]) if dtype_cell else out), rowids
+    finally:
+        if own_store:
+            store.close()

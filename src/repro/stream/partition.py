@@ -1,0 +1,166 @@
+"""Distribution-adaptive MSD partitioning from the streamed fractal histogram.
+
+The external sort's first pass accumulates the compressed histogram of the
+leading MSD field across every chunk of a :class:`~repro.stream.chunks.
+ChunkSource` — one :meth:`~repro.core.executor.PlanExecutor.digit_counts`
+call per chunk, the running counts carried across chunks exactly like the
+two-phase rank engine carries its per-chunk histograms (and, on the
+Pallas backend, like the histogram kernel's ``init``-seeded accumulator).
+No sampling pre-pass, no splitter selection: the histogram *is* the
+distribution, so the paper's no-preprocessing claim survives out-of-core
+— the same move Stehle & Jacobsen's hybrid radix sort uses to make
+buckets independently sortable, and Leyenda uses to sort under a hard
+memory cap.
+
+The second half is pure planning: :func:`partition_bins` greedily merges
+adjacent bins into partitions whose *predicted* sizes fit the budget.
+Partitions are disjoint key ranges, so sorted partitions concatenate into
+the total order — no k-way merge.  A single bin that alone exceeds the
+budget (heavy skew) becomes its own oversized partition; the external
+sort re-partitions it recursively on the next field down (every key in a
+single-bin partition shares that bin's digit, so the sub-field histogram
+is again discriminating).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import JnpBackend, PlanExecutor
+from repro.core.fractal_tree import ceil_log2
+from repro.core.sort_plan import DigitPass
+
+__all__ = [
+    "DEFAULT_PARTITION_BITS",
+    "KeyPartition",
+    "partition_bins",
+    "streamed_field_counts",
+]
+
+#: Width of the leading MSD field the partitioner histograms.  1024 bins:
+#: wide enough that a uniform-ish distribution yields partitions far finer
+#: than any realistic budget (so greedy merging, not bin granularity, sets
+#: partition sizes), narrow enough that the counts array is noise next to
+#: one chunk.  The same trade as the query layer's top-k pruning digit.
+DEFAULT_PARTITION_BITS = 10
+
+#: Rows the device (int32) histogram carry may accumulate before it is
+#: spilled onto the host int64 total: a single bin can hold every row, so
+#: the carry must spill before any window nears 2**31 (the repo runs JAX
+#: x64-off — int64 device counters are not an option).  2**30 leaves a 2x
+#: margin; a spill is one (n_bins,) device→host copy per ~billion rows.
+_CARRY_SPILL_ROWS = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyPartition:
+    """Bins ``[lo, hi)`` of one partitioning field, with the histogram's
+    predicted row count.  The field's ``shift`` is context (the caller's
+    :class:`DigitPass`); ``lo``/``hi`` order partitions by key range."""
+
+    lo: int
+    hi: int
+    count: int
+
+    @property
+    def num_bins(self) -> int:
+        return self.hi - self.lo
+
+    def oversized(self, budget_rows: int) -> bool:
+        """Predicted not to fit the budget — only ever true for a single
+        bin (greedy merging never grows a partition past the budget), so
+        the recursive re-partition below always has a shared digit to
+        peel off."""
+        return self.count > budget_rows
+
+
+def streamed_field_counts(
+    chunk_iter: Iterable[np.ndarray],
+    dp: DigitPass,
+    executor: Optional[PlanExecutor] = None,
+) -> Tuple[np.ndarray, int]:
+    """Histogram of ``dp``'s digit across a whole chunk stream.
+
+    ``chunk_iter`` yields 1-D uint32-castable key (or code-word) chunks;
+    each chunk costs one executor ``digit_counts`` call, with the running
+    counts as the carry.  Chunks are padded to their power-of-two ceiling
+    with the out-of-range sentinel, so ragged tails reuse O(log max-chunk)
+    jit traces instead of one per distinct length.
+
+    The device carry is int32 (JAX runs x64-off here); before any carry
+    window reaches ``_CARRY_SPILL_ROWS`` it spills onto a host int64
+    total, so bin counts stay exact at the multi-billion-row scale the
+    paper's regime implies (a single bin can hold *every* row).
+
+    Returns ``(counts, total_rows)`` — counts as host int64 (the planner
+    does python-int arithmetic on them).
+    """
+    ex = executor or PlanExecutor(JnpBackend())
+    total64 = np.zeros((dp.n_bins,), np.int64)
+    carried = None
+    window_rows = 0
+    total = 0
+    for chunk in chunk_iter:
+        chunk = np.ascontiguousarray(chunk)
+        m = int(chunk.shape[0])
+        if carried is not None and window_rows + m > _CARRY_SPILL_ROWS:
+            total64 += np.asarray(carried).astype(np.int64)
+            carried, window_rows = None, 0
+        pad_to = 1 << ceil_log2(max(m, 1))
+        carried = ex.digit_counts(jnp.asarray(chunk.view(np.uint32)), dp,
+                                  init=carried, pad_to=pad_to)
+        window_rows += m
+        total += m
+    if carried is not None:
+        total64 += np.asarray(carried).astype(np.int64)
+    return total64, total
+
+
+def partition_bins(counts: np.ndarray,
+                   budget_rows: int) -> Tuple[KeyPartition, ...]:
+    """Greedily merge adjacent bins into budget-fitting partitions.
+
+    Walks the histogram low bin to high, packing bins into the current
+    partition while the predicted total stays within ``budget_rows``.  A
+    single bin larger than the budget is emitted *alone* — never merged,
+    even with empty neighbours — so an oversized partition is always
+    exactly one bin and the external sort's recursive re-partition has a
+    shared digit to peel off.  Empty bins attach to whichever partition
+    is open (they predict zero rows, so they never change a fit); only
+    non-empty partitions are returned, with bin ranges disjoint and
+    ordered.
+    """
+    assert budget_rows >= 1
+    n_bins = int(np.asarray(counts).shape[0])
+    parts = []
+    lo, acc = 0, 0
+    for b in range(n_bins):
+        c = int(counts[b])
+        if c > budget_rows:
+            # skewed bin: alone, so recursion sees one shared digit
+            if acc > 0:
+                parts.append(KeyPartition(lo=lo, hi=b, count=acc))
+            parts.append(KeyPartition(lo=b, hi=b + 1, count=c))
+            lo, acc = b + 1, 0
+            continue
+        if acc > 0 and acc + c > budget_rows:
+            parts.append(KeyPartition(lo=lo, hi=b, count=acc))
+            lo, acc = b, 0
+        acc += c
+    if acc > 0:
+        parts.append(KeyPartition(lo=lo, hi=n_bins, count=acc))
+    return tuple(parts)
+
+
+def bin_to_partition(partitions: Tuple[KeyPartition, ...],
+                     n_bins: int) -> np.ndarray:
+    """Bin id → partition index lookup (-1 for bins no partition claims —
+    empty-count gaps that no key can hit)."""
+    lut = np.full((n_bins,), -1, np.int64)
+    for i, part in enumerate(partitions):
+        lut[part.lo:part.hi] = i
+    return lut

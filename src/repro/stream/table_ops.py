@@ -1,0 +1,283 @@
+"""StreamTable: the query layer over chunked, larger-than-budget tables.
+
+A :class:`StreamTable` is the out-of-core sibling of
+:class:`~repro.query.table.Table`: named, equal-dtype columns arriving as
+a re-iterable stream of in-memory Table chunks (a list, a generator
+factory, a :class:`~repro.stream.chunks.ChunkSource`, or spilled
+:class:`~repro.stream.chunks.RunStore` runs).  The query operators
+(``order_by`` / ``group_by`` / ``top_k``) accept one anywhere a Table
+goes and dispatch here; each streaming operator is the in-memory operator
+riding :func:`~repro.stream.external.stream_sorted_words`:
+
+* **order_by** — key columns encode per chunk through the same
+  order-preserving codecs, the ``(n, W)`` code words partition-sort with
+  every payload column riding the spill fragments, and the sorted chunks
+  spill as result runs: the returned StreamTable is re-iterable and never
+  holds more than a budget of rows resident;
+* **group_by** — partitions are disjoint key ranges, so groups never
+  span sorted chunks except where recursion exhausted the code (fully
+  equal keys); one in-memory ``group_by`` per sorted chunk plus a
+  boundary merge of adjacent partials is the whole streaming aggregation
+  (the output — one row per group — is assumed to fit memory);
+* **top_k** — the partition histogram already proves which partitions
+  can reach rank k; later partitions are never spilled, never loaded
+  (``limit_rows`` pruning inside the external core).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.query.table import Table
+from repro.stream.chunks import ChunkSource, MemoryBudget, RunStore
+from repro.stream.external import row_cost_bytes, stream_sorted_words
+
+__all__ = [
+    "StreamTable",
+    "stream_group_by",
+    "stream_order_by",
+    "stream_top_k",
+]
+
+
+def _slice_table(table: Table, lo: int, hi: int) -> Table:
+    return Table({n: table.column(n)[lo:hi] for n in table.column_names})
+
+
+class StreamTable:
+    """Named columns streamed as budget-sized :class:`Table` chunks.
+
+    ``chunks`` is a sequence of Tables, a zero-argument callable
+    returning a fresh Table iterator, or a :class:`ChunkSource` yielding
+    Tables; all chunks must share column names and dtypes, and the stream
+    must be re-iterable (the external sort reads it twice).  ``store``
+    ties the lifetime of spilled result runs to this table (closed via
+    :meth:`close` or garbage collection).
+    """
+
+    def __init__(self, chunks, budget: MemoryBudget,
+                 store: Optional[RunStore] = None):
+        self._chunks = chunks
+        self.budget = budget
+        self._store = store
+        self._first: Optional[Table] = None
+
+    @classmethod
+    def from_table(cls, table: Table, budget: MemoryBudget) -> "StreamTable":
+        """Budget-sized slices of one in-memory table (testing and
+        "it fit after all" interop)."""
+        rows = budget.rows(_table_row_bytes(table))
+        pieces = [_slice_table(table, lo, min(lo + rows, table.num_rows))
+                  for lo in range(0, max(table.num_rows, 1), rows)]
+        return cls(pieces, budget)
+
+    def chunk_tables(self) -> Iterator[Table]:
+        src = self._chunks
+        if isinstance(src, ChunkSource):
+            it: Iterator = src.chunks()
+        elif callable(src):
+            it = iter(src())
+        else:
+            it = iter(src)
+        for t in it:
+            assert isinstance(t, Table), (
+                f"StreamTable chunks must be Tables, got {type(t)}")
+            yield t
+
+    def _peek(self) -> Optional[Table]:
+        if self._first is None:
+            self._first = next(self.chunk_tables(), None)
+        return self._first
+
+    @property
+    def column_names(self) -> tuple:
+        first = self._peek()
+        assert first is not None, "empty StreamTable has no schema"
+        return first.column_names
+
+    def column_sample(self, name: str):
+        """First chunk's column (codec inference needs a dtype sample)."""
+        first = self._peek()
+        assert first is not None, "empty StreamTable has no schema"
+        return first.column(name)
+
+    def num_rows_streamed(self) -> int:
+        """Total rows, by streaming the source once (an O(dataset-read)
+        question on a stream — named so nobody mistakes it for free)."""
+        return sum(t.num_rows for t in self.chunk_tables())
+
+    def to_table(self) -> Table:
+        """Materialize every chunk (test/interop path — the caller is
+        asserting the data fits in memory)."""
+        pieces = list(self.chunk_tables())
+        assert pieces, "empty StreamTable"
+        return Table({
+            n: _concat_col([t.column(n) for t in pieces])
+            for n in pieces[0].column_names})
+
+    def close(self) -> None:
+        if self._store is not None:
+            self._store.close()
+
+    def __repr__(self) -> str:
+        first = self._peek()
+        cols = "?" if first is None else ", ".join(
+            f"{k}:{np.dtype(first.column(k).dtype)}"
+            for k in first.column_names)
+        return f"StreamTable(budget={self.budget.limit_bytes}B; {cols})"
+
+
+def _concat_col(pieces: Sequence) -> np.ndarray:
+    return np.concatenate([np.asarray(p) for p in pieces])
+
+
+def _table_row_bytes(table: Table) -> int:
+    return sum(np.dtype(table.column(n).dtype).itemsize
+               for n in table.column_names)
+
+
+def _encoded_stream(st: StreamTable, by, codecs):
+    """(codec, column names, chunks_fn, row_bytes): the (words, payloads)
+    adapter the external core consumes — key columns encode through the
+    same order-preserving codecs as the in-memory operators (codec
+    resolved once, on the first chunk; chunk dtypes must be stable), and
+    *every* column rides the spill as a payload."""
+    from repro.query.operators import _composite_for, _normalize_by
+
+    first = st._peek()
+    assert first is not None, "cannot sort an empty StreamTable"
+    by_norm = _normalize_by(by)
+    codec, _ = _composite_for(first, by_norm, codecs)
+    names = first.column_names
+    row_bytes = row_cost_bytes(codec.num_words, _table_row_bytes(first))
+
+    def chunks_fn():
+        for t in st.chunk_tables():
+            cols = [t.column(name) for name, _ in by_norm]
+            words = np.asarray(codec.encode(cols), np.uint32)
+            yield words, tuple(np.asarray(t.column(n)) for n in names)
+
+    return codec, names, chunks_fn, row_bytes
+
+
+def stream_order_by(st: StreamTable, by,
+                    codecs=None,
+                    store: Optional[RunStore] = None) -> StreamTable:
+    """Streaming multi-column ORDER BY (stable): returns a re-iterable
+    StreamTable of sorted runs spilled to ``store`` (an owned temp store
+    by default).  Peak residency stays within ``st.budget`` — the
+    sorting itself runs partition by partition through the external
+    core."""
+    codec, names, chunks_fn, row_bytes = _encoded_stream(st, by, codecs)
+    work = RunStore()  # fragments; dropped as soon as each partition sorts
+    out_store = store or RunStore()
+    run_ids = []
+    try:
+        for _, payloads in stream_sorted_words(
+                chunks_fn, codec.bits, st.budget, work, row_bytes):
+            run_ids.append(out_store.put(*payloads))
+    finally:
+        work.close()
+    chunks = _run_tables_fn(out_store, run_ids, names)
+    return StreamTable(chunks, st.budget,
+                       store=out_store if store is None else None)
+
+
+def _run_tables_fn(store: RunStore, run_ids, names) -> Callable:
+    def chunks():
+        for rid in run_ids:
+            arrays = store.get(rid)
+            yield Table(dict(zip(names, arrays)))
+    return chunks
+
+
+def stream_top_k(st: StreamTable, by, k: int, codecs=None,
+                 store: Optional[RunStore] = None) -> Table:
+    """First ``k`` rows of the streaming stable ORDER BY, as one
+    in-memory Table (k rows are assumed to fit — that is what top-k is
+    for).  The partition histogram prunes ahead of the spill: partitions
+    that cannot reach rank k are never written to disk, never loaded.
+    ``store`` exposes the working spill store (tests count what was —
+    and wasn't — touched)."""
+    if k <= 0:
+        first = st._peek()
+        assert first is not None, "cannot top_k an empty StreamTable"
+        return first.head(0)
+    codec, names, chunks_fn, row_bytes = _encoded_stream(st, by, codecs)
+    own = store is None
+    work = store or RunStore()
+    try:
+        pieces = [Table(dict(zip(names, payloads)))
+                  for _, payloads in stream_sorted_words(
+                      chunks_fn, codec.bits, st.budget, work, row_bytes,
+                      limit_rows=k)]
+    finally:
+        if own:
+            work.close()
+    if not pieces:
+        return st._peek().head(0)
+    return Table({n: _concat_col([t.column(n) for t in pieces])[:k]
+                  for n in names})
+
+
+# aggregate combiners for the partial-merge at sorted-chunk boundaries
+_COMBINE = {"sum": np.add, "count": np.add,
+            "min": np.minimum, "max": np.maximum}
+
+
+def stream_group_by(st: StreamTable, by,
+                    aggs: Mapping[str, Tuple[Optional[str], str]],
+                    codecs=None) -> Table:
+    """Streaming GROUP BY + aggregation: one in-memory ``group_by`` per
+    sorted chunk, partials merged at chunk boundaries.
+
+    Partitions are disjoint key ranges, so a group can only straddle two
+    sorted chunks when the external core split one partition (skew
+    recursion / fully-equal tails); the boundary merge — combine the last
+    group of the running result with the first group of the next partial
+    when their keys match — is exact for sum/count/min/max.  Output: one
+    row per group, key-sorted (assumed to fit memory, as for the
+    in-memory operator).
+    """
+    from repro.query.operators import _normalize_by, group_by
+
+    by_norm = _normalize_by(by)
+    codec, names, chunks_fn, row_bytes = _encoded_stream(st, by_norm, codecs)
+    acc: Optional[dict] = None
+    prev_last_code: Optional[np.ndarray] = None
+    with RunStore() as work:
+        for words, payloads in stream_sorted_words(
+                chunks_fn, codec.bits, st.budget, work, row_bytes):
+            part = group_by(Table(dict(zip(names, payloads))), by_norm,
+                            aggs, codecs)
+            partial = {n: np.asarray(part.column(n))
+                       for n in part.column_names}
+            # boundary identity is decided on the ENCODED code words, not
+            # decoded values: the codec's notion of "same group" (-0.0 vs
+            # 0.0 are distinct codes; NaN codes compare equal to
+            # themselves) must match the in-memory operator's segments
+            boundary = prev_last_code is not None and np.array_equal(
+                words[0], prev_last_code)
+            acc = partial if acc is None else \
+                _merge_partials(acc, partial, boundary, aggs)
+            prev_last_code = np.asarray(words[-1])
+    assert acc is not None, "cannot group an empty StreamTable"
+    return Table(acc)
+
+
+def _merge_partials(acc: dict, nxt: dict, boundary: bool, aggs) -> dict:
+    """Append ``nxt``'s groups onto ``acc``; ``boundary`` (the chunks'
+    adjoining code words were equal) combines the straddling group."""
+    out = {}
+    for name in acc:
+        a, b = acc[name], nxt[name]
+        if boundary:
+            if name in aggs:
+                _, op = aggs[name]
+                joined = _COMBINE[op](a[-1], b[0])
+                a = np.concatenate([a[:-1], np.asarray([joined], a.dtype)])
+            b = b[1:]
+        out[name] = np.concatenate([a, b])
+    return out

@@ -140,6 +140,44 @@ def test_digit_histograms_match_bincount(rng):
             np.asarray(h), np.bincount(digit, minlength=dp.n_bins))
 
 
+def test_histogram_init_accumulates_across_chunks(rng):
+    """The kernel's ``init``-seeded accumulator: streaming a key stream
+    chunk by chunk with the carried counts equals one histogram of the
+    whole stream (paper §III.D, in-kernel)."""
+    from repro.kernels.fractal_histogram import fractal_histogram
+
+    n_bins = 64
+    keys = rng.integers(0, n_bins, 5000).astype(np.int32)
+    whole = fractal_histogram(jnp.asarray(keys), n_bins, block=256)
+    carried = None
+    for lo in range(0, keys.shape[0], 1237):  # ragged chunks
+        carried = fractal_histogram(jnp.asarray(keys[lo:lo + 1237]),
+                                    n_bins, block=256, init=carried)
+    np.testing.assert_array_equal(np.asarray(carried), np.asarray(whole))
+    np.testing.assert_array_equal(
+        np.asarray(whole), np.bincount(keys, minlength=n_bins))
+
+
+def test_backend_histogram_hook_parity(rng):
+    """PassBackend.histogram (the streaming partitioner's per-chunk hook):
+    jnp scatter-add ≡ the pallas kernel, out-of-range padding dropped."""
+    from repro.core import JnpBackend, PallasBackend, PlanExecutor
+    from repro.core.sort_plan import DigitPass
+
+    keys = rng.integers(0, 1 << 12, 4000, dtype=np.uint64).astype(np.uint32)
+    dp = DigitPass(shift=4, bits=6)
+    counts = []
+    for backend in (JnpBackend(), PallasBackend(block=256)):
+        ex = PlanExecutor(backend)
+        counts.append(np.asarray(
+            ex.digit_counts(jnp.asarray(keys, jnp.uint32), dp,
+                            pad_to=4096)))
+    np.testing.assert_array_equal(counts[0], counts[1])
+    digit = (keys >> np.uint32(dp.shift)) & np.uint32(dp.n_bins - 1)
+    np.testing.assert_array_equal(
+        counts[0], np.bincount(digit, minlength=dp.n_bins))
+
+
 
 @pytest.mark.parametrize("shape", [
     (2, 64, 4, 16, 64), (1, 48, 2, 8, 80), (2, 100, 2, 32, 100),

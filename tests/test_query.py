@@ -313,10 +313,96 @@ def test_join_composite_key_and_payload_gather(rng):
         assert int(amt) in la[(int(x), int(y))]
 
 
-def test_join_key_width_guard(rng):
-    t = Table({"x": rng.standard_normal(10)})  # float64: 64-bit code
-    with pytest.raises(AssertionError, match="32"):
-        sort_merge_join(t, t, "x")
+def _structured(cols: dict) -> np.ndarray:
+    """Key columns as one numpy structured array (field-by-field — i.e.
+    lexicographic — comparison: the multi-word join oracle)."""
+    n = len(next(iter(cols.values())))
+    out = np.zeros((n,), np.dtype([(k, v.dtype) for k, v in cols.items()]))
+    for k, v in cols.items():
+        out[k] = v
+    return out
+
+
+def _join_oracle_pairs(lk: dict, rk: dict):
+    """Matching (left row, right row) pairs in the operator's output
+    order — key-sorted, ties by (left arrival, right arrival) — computed
+    entirely on structured arrays."""
+    ls, rs = _structured(lk), _structured(rk)
+    rperm = np.argsort(rs, kind="stable")
+    rss = rs[rperm]
+    lo = np.searchsorted(rss, ls, side="left")
+    hi = np.searchsorted(rss, ls, side="right")
+    return [(int(lpos), int(rperm[j]))
+            for lpos in np.argsort(ls, kind="stable")
+            for j in range(lo[lpos], hi[lpos])]
+
+
+def _check_multiword_join(left_keys: dict, right_keys: dict, codecs=None):
+    nl = len(next(iter(left_keys.values())))
+    nr = len(next(iter(right_keys.values())))
+    left = Table({**left_keys, "lv": np.arange(nl, dtype=np.int32)})
+    right = Table({**right_keys, "rv": np.arange(nr, dtype=np.int32)})
+    out = sort_merge_join(left, right, list(left_keys), codecs=codecs)
+    want = _join_oracle_pairs(left_keys, right_keys)
+    got = list(zip(np.asarray(out.column("lv")).tolist(),
+                   np.asarray(out.column("rv")).tolist()))
+    assert got == want
+
+
+def test_join_multiword_float64(rng):
+    """64-bit (two-word) float64 join keys, duplicate-heavy, including
+    values that share the high code word and differ only in the low
+    mantissa word (cross-word-boundary ties are real matches/misses)."""
+    pool = np.array([1.0, 1.0 + 2.0 ** -40, 1.0 + 2.0 ** -20,
+                     -3.5, -3.5 - 2.0 ** -41, 0.0, 7.25], np.float64)
+    lk = pool[rng.integers(0, len(pool), 400)]
+    rk = pool[rng.integers(0, len(pool), 150)]
+    _check_multiword_join({"x": lk}, {"x": rk})
+
+
+def test_join_multiword_composite_64(rng):
+    """(int32, int32) composite: 64-bit code, word 0 = first column —
+    rows equal in word 0 and differing across the boundary must tie-break
+    on word 1 exactly as one wide integer key."""
+    _check_multiword_join(
+        {"a": rng.integers(-4, 4, 600).astype(np.int32),
+         "b": rng.integers(-3, 3, 600).astype(np.int32)},
+        {"a": rng.integers(-4, 4, 200).astype(np.int32),
+         "b": rng.integers(-3, 3, 200).astype(np.int32)})
+
+
+def test_join_multiword_three_words_uneven_tail(rng):
+    """(int32, int32, int16) = 80-bit code: three words, the last only 16
+    bits wide — ties that differ only inside the short tail word."""
+    _check_multiword_join(
+        {"a": rng.integers(-2, 2, 300).astype(np.int32),
+         "b": rng.integers(-2, 2, 300).astype(np.int32),
+         "c": rng.integers(-8, 8, 300).astype(np.int16)},
+        {"a": rng.integers(-2, 2, 120).astype(np.int32),
+         "b": rng.integers(-2, 2, 120).astype(np.int32),
+         "c": rng.integers(-8, 8, 120).astype(np.int16)})
+
+
+def test_words_searchsorted_matches_structured(rng):
+    """The lexicographic merge probe ≡ numpy structured searchsorted on
+    random word matrices (duplicates everywhere)."""
+    from repro.query.operators import _words_searchsorted
+
+    for W in (2, 3):
+        m, n = 500, 300
+        sw = np.sort(_structured(
+            {f"w{j}": rng.integers(0, 4, m).astype(np.uint32)
+             for j in range(W)}), kind="stable")
+        sorted_words = np.stack([sw[f"w{j}"] for j in range(W)], axis=1)
+        queries = np.stack(
+            [rng.integers(0, 5, n).astype(np.uint32) for _ in range(W)],
+            axis=1)
+        qs = _structured(
+            {f"w{j}": queries[:, j] for j in range(W)})
+        for side in ("left", "right"):
+            got = _words_searchsorted(sorted_words, queries, side)
+            want = np.searchsorted(sw, qs, side=side)
+            assert np.array_equal(got, want), (W, side)
 
 
 def test_join_rejects_mismatched_column_widths(rng):

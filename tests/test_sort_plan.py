@@ -57,6 +57,31 @@ def test_plan_tiny_inputs_bound_bins_by_data_scale():
     assert all(dp.n_bins <= 16 for dp in plan1.passes), plan1
 
 
+def test_plan_p0_identity_and_no_degenerate_passes():
+    """p=0 (zero-width keys — the external sort's exhausted-recursion
+    case) is the empty identity plan, resolved without touching the
+    autotune cache; no plan ever emits a 1-bin (zero-width) pass."""
+    from repro.core import (PlanExecutor, JnpBackend, fractal_argsort,
+                            tuned_plan)
+
+    plan = make_sort_plan(100, 0)
+    assert plan.passes == ()
+    assert plan.depth == 0 and plan.trailing_bits == 0
+    assert not plan.supports_grouped_trailing
+    assert plan.describe() == "identity"
+    assert tuned_plan(1 << 20, 0).passes == ()
+    keys = jnp.zeros((17,), jnp.int32)
+    ex = PlanExecutor(JnpBackend())
+    assert np.array_equal(np.asarray(ex.run(keys, plan)), np.zeros(17))
+    sk, vals = ex.run_pairs(keys, jnp.arange(17, dtype=jnp.int32), plan)
+    assert np.array_equal(np.asarray(vals), np.arange(17))
+    assert np.array_equal(np.asarray(fractal_argsort(keys, p=0)),
+                          np.arange(17))
+    for n in (1, 64, 5000):
+        for p in range(1, 33):
+            assert all(dp.bits >= 1 for dp in make_sort_plan(n, p).passes)
+
+
 def test_plan_explicit_ln_wins_over_cap():
     """A caller-supplied trie depth is honored, not silently clamped to
     the bin cap; only the LSD digits stay capped."""

@@ -1,0 +1,427 @@
+"""Out-of-core streaming sort subsystem: external sort ≡ the in-memory
+oracle across adversarial distributions, chunk/budget boundary cases,
+recursion under skew, argsort stability across spilled runs, the stable
+k-way run merge, budget (allocation-peak) accounting, StreamTable
+operators vs their in-memory twins, and top-k partition pruning that
+never touches skipped runs."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.query import Table, group_by, order_by, top_k
+from repro.stream import (
+    ArraySource,
+    GeneratorSource,
+    MemoryBudget,
+    RunStore,
+    StreamTable,
+    external_argsort,
+    external_sort,
+    merge_runs,
+    partition_bins,
+)
+from repro.stream.partition import KeyPartition
+
+
+def _dist_keys(rng, name: str, n: int, p: int) -> np.ndarray:
+    hi = 1 << p
+    if name == "uniform":
+        k = rng.integers(0, hi, n, dtype=np.uint64)
+    elif name == "zipf":
+        k = np.minimum(rng.zipf(1.3, n), hi - 1)
+    elif name == "all_equal":
+        k = np.full(n, hi // 3, np.uint64)
+    elif name == "reverse_sorted":
+        k = np.sort(rng.integers(0, hi, n, dtype=np.uint64))[::-1]
+    elif name == "onehot_bin":
+        # ~95% of keys land in one MSD bin: the recursion (skew) path
+        bin_lo = (hi // 2) & ~((hi >> 10) - 1) if p >= 10 else 0
+        skew = bin_lo + rng.integers(0, max(hi >> 10, 1), n, dtype=np.uint64)
+        k = np.where(rng.random(n) < 0.95, skew,
+                     rng.integers(0, hi, n, dtype=np.uint64))
+    else:
+        raise AssertionError(name)
+    return k.astype(np.uint32).astype(np.int32 if p < 32 else np.uint32)
+
+
+def _collect_sort(keys, p, budget, **kw):
+    src = ArraySource(keys, budget.rows(8))
+    out = list(external_sort(src, p, budget, **kw))
+    return np.concatenate(out) if out else np.zeros((0,), keys.dtype)
+
+
+# --- external_sort vs oracle -------------------------------------------------
+
+
+@pytest.mark.parametrize("dist", ["uniform", "zipf", "all_equal",
+                                  "reverse_sorted", "onehot_bin"])
+@pytest.mark.parametrize("p", [12, 20, 32])
+def test_external_sort_matches_oracle(rng, dist, p):
+    keys = _dist_keys(rng, dist, 12000, p)
+    budget = MemoryBudget(12 * 1024)  # dataset ≈ 4x the budget
+    out = _collect_sort(keys, p, budget)
+    assert np.array_equal(out, np.sort(keys))
+    assert out.dtype == keys.dtype
+    assert budget.peak_bytes <= budget.limit_bytes
+
+
+@pytest.mark.parametrize("n,chunk_rows", [
+    (1, 7), (7, 7), (8, 7), (9, 7), (4097, 64), (5000, 999),
+])
+def test_external_sort_chunk_boundaries(rng, n, chunk_rows):
+    """Ragged tails, single-row datasets, chunks that divide n exactly."""
+    keys = _dist_keys(rng, "uniform", n, 16)
+    budget = MemoryBudget(2048)
+    out = list(external_sort(ArraySource(keys, chunk_rows), 16, budget))
+    got = np.concatenate(out) if out else np.zeros((0,), keys.dtype)
+    assert np.array_equal(got, np.sort(keys))
+
+
+def test_external_sort_budget_smaller_than_one_partition(rng):
+    """Every key in one MSD bin and the budget below the bin count: the
+    greedy planner cannot split, so the recursive re-partition path must
+    carry the whole sort (multiple levels deep)."""
+    n = 3000
+    keys = ((3 << 20) | rng.integers(0, 1 << 6, n,
+                                     dtype=np.uint64).astype(np.uint32)) \
+        .astype(np.int32)  # 24-bit keys, identical down to the low 6 bits
+    budget = MemoryBudget(1024)  # 64 rows per partition at 16 B/row
+    out = _collect_sort(keys, 24, budget)
+    assert np.array_equal(out, np.sort(keys))
+    assert budget.peak_bytes <= budget.limit_bytes
+
+
+def test_external_sort_generator_source(rng):
+    """GeneratorSource: the dataset is produced per pass, never stored."""
+    def factory():
+        g = np.random.default_rng(7)  # fresh per pass: identical streams
+        for _ in range(23):
+            yield g.integers(0, 1 << 16, 1000).astype(np.int32)
+
+    budget = MemoryBudget(8 * 1024)
+    out = np.concatenate(list(external_sort(
+        GeneratorSource(factory), 16, budget)))
+    ref = np.sort(np.concatenate(list(factory())))
+    assert np.array_equal(out, ref)
+
+
+def test_external_sort_empty_and_p0(rng):
+    budget = MemoryBudget(1024)
+    assert list(external_sort(ArraySource(np.zeros(0, np.int32), 4),
+                              16, budget)) == []
+    assert list(external_argsort(ArraySource(np.zeros(0, np.int32), 4),
+                                 16, budget)) == []
+    # p=0: every key is the zero-width value; output is arrival order
+    keys = np.zeros(3000, np.int32)
+    out = np.concatenate(list(external_sort(
+        ArraySource(keys, 500), 0, MemoryBudget(1024))))
+    assert np.array_equal(out, keys)
+    sk, idx = map(np.concatenate, zip(*external_argsort(
+        ArraySource(keys, 500), 0, MemoryBudget(1024))))
+    assert np.array_equal(idx, np.arange(3000))
+
+
+# --- the acceptance bar: ≥ 8x budget, bit-exact, peak under the cap ----------
+
+
+def test_external_sort_8x_budget_bit_exact_within_peak(rng):
+    budget = MemoryBudget(16 * 1024)
+    n = 8 * budget.limit_bytes // 4  # key bytes = 8x the budget
+    keys = _dist_keys(rng, "uniform", n, 32)
+    src = ArraySource(keys, budget.rows(8))
+    out = np.concatenate(list(external_sort(src, 32, budget)))
+    oracle = np.asarray(jnp.sort(jnp.asarray(keys)))
+    assert np.array_equal(out, oracle), "external sort must be bit-exact"
+    assert budget.peak_bytes <= budget.limit_bytes, (
+        f"peak resident {budget.peak_bytes} B exceeded the "
+        f"{budget.limit_bytes} B budget")
+    assert budget.peak_bytes > 0, "the tracker must have seen the arrays"
+
+
+def test_external_argsort_8x_budget_stable(rng):
+    budget = MemoryBudget(16 * 1024)
+    n = 8 * budget.limit_bytes // 4
+    # duplicate-heavy: stability is observable on every spilled run
+    keys = rng.integers(0, 97, n).astype(np.int32)
+    src = ArraySource(keys, budget.rows(16))
+    pieces = list(external_argsort(src, 7, budget, ))
+    sk = np.concatenate([p[0] for p in pieces])
+    idx = np.concatenate([p[1] for p in pieces])
+    assert np.array_equal(idx, np.argsort(keys, kind="stable"))
+    assert np.array_equal(sk, keys[idx])
+    assert budget.peak_bytes <= budget.limit_bytes
+
+
+@pytest.mark.parametrize("dist", ["zipf", "onehot_bin"])
+def test_external_argsort_stable_under_skew(rng, dist):
+    keys = _dist_keys(rng, dist, 12000, 16)
+    budget = MemoryBudget(8 * 1024)
+    pieces = list(external_argsort(ArraySource(keys, budget.rows(16)),
+                                   16, budget))
+    idx = np.concatenate([p[1] for p in pieces])
+    assert np.array_equal(idx, np.argsort(keys, kind="stable"))
+
+
+# --- partition planning ------------------------------------------------------
+
+
+def test_streamed_counts_carry_spill_window(rng, monkeypatch):
+    """The device int32 carry spills onto the host int64 total before a
+    window can overflow — exercised with a tiny window so multiple spills
+    happen over ordinary data."""
+    from repro.stream import partition as pmod
+    from repro.core.sort_plan import DigitPass
+
+    monkeypatch.setattr(pmod, "_CARRY_SPILL_ROWS", 1000)
+    keys = rng.integers(0, 1 << 8, 5000).astype(np.uint32)
+    dp = DigitPass(shift=4, bits=4)
+    counts, total = pmod.streamed_field_counts(
+        (keys[lo:lo + 700] for lo in range(0, 5000, 700)), dp)
+    assert total == 5000 and counts.dtype == np.int64
+    np.testing.assert_array_equal(
+        counts, np.bincount((keys >> 4) & 15, minlength=16))
+
+
+def test_external_sort_rejects_float_keys(rng):
+    from repro.stream import external_sort
+
+    gen = external_sort(ArraySource(np.ones(8, np.float32), 4), 32,
+                        MemoryBudget(1024))
+    with pytest.raises(AssertionError, match="int32/uint32"):
+        list(gen)
+
+
+def test_partition_bins_greedy_fits_budget():
+    counts = np.array([5, 3, 0, 9, 2, 0, 0, 4], np.int64)
+    parts = partition_bins(counts, budget_rows=10)
+    assert sum(p.count for p in parts) == counts.sum()
+    assert all(p.count <= 10 for p in parts)
+    # disjoint, ordered, covering every non-empty bin
+    for a, b in zip(parts, parts[1:]):
+        assert a.hi <= b.lo
+    assert all(not p.oversized(10) for p in parts)
+
+
+def test_partition_bins_oversized_single_bin_stays_alone():
+    counts = np.array([0, 0, 50, 1, 1], np.int64)
+    parts = partition_bins(counts, budget_rows=10)
+    over = [p for p in parts if p.oversized(10)]
+    assert len(over) == 1 and over[0].num_bins == 1 and over[0].lo == 2, (
+        "a skewed bin must not merge with neighbours — recursion peels "
+        "its shared digit")
+    assert sum(p.count for p in parts) == 52
+
+
+def test_partition_bins_all_oversized():
+    parts = partition_bins(np.array([20, 30], np.int64), budget_rows=10)
+    assert parts == (KeyPartition(0, 1, 20), KeyPartition(1, 2, 30))
+
+
+# --- the k-way merge (pure-streaming path) -----------------------------------
+
+
+def test_merge_runs_matches_stable_concat_sort(rng):
+    with RunStore() as store:
+        ids, all_keys, all_tags = [], [], []
+        for i in range(5):
+            m = int(rng.integers(1, 4000))
+            k = np.sort(rng.integers(0, 300, m).astype(np.int32))
+            tag = np.full(m, i, np.int32)
+            ids.append(store.put(k, tag, np.arange(m, dtype=np.int32)))
+            all_keys.append(k)
+            all_tags.append(tag)
+        cat_k = np.concatenate(all_keys)
+        cat_t = np.concatenate(all_tags)
+        budget = MemoryBudget(4096)
+        out = list(merge_runs(store, ids, budget))
+        keys = np.concatenate([o[0] for o in out])
+        tags = np.concatenate([o[1] for o in out])
+        order = np.argsort(cat_k, kind="stable")  # run idx then arrival
+        assert np.array_equal(keys, cat_k[order])
+        assert np.array_equal(tags, cat_t[order]), (
+            "ties must keep run order (stability across runs)")
+
+
+def test_merge_runs_single_and_empty():
+    with RunStore() as store:
+        rid = store.put(np.array([1, 2, 3], np.int32))
+        assert list(merge_runs(store, [], MemoryBudget(64))) == []
+        assert np.array_equal(
+            np.concatenate([o[0] for o in merge_runs(
+                store, [rid], MemoryBudget(64))]),
+            np.array([1, 2, 3], np.int32))
+
+
+# --- RunStore / MemoryBudget -------------------------------------------------
+
+
+def test_run_store_round_trip_and_logs(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    a = np.arange(10, dtype=np.int32)
+    b = np.arange(10, dtype=np.float32)
+    rid = store.put(a, b)
+    got = store.get(rid)
+    assert np.array_equal(got[0], a) and np.array_equal(got[1], b)
+    assert store.put_log == [rid] and store.get_log == [rid]
+    assert store.nbytes() > 0
+    store.delete(rid)
+    assert len(store) == 0
+    store.close()
+
+
+def test_memory_budget_rows_and_charge():
+    b = MemoryBudget(1024, headroom=2)
+    assert b.rows(4) == 128  # 1024 / (2 * 4)
+    assert b.rows(100000) == 1  # floor
+    b.charge(np.zeros(100, np.int32), np.zeros(10, np.int64))
+    assert b.peak_bytes == 480
+    b.charge(np.zeros(1, np.int8))
+    assert b.peak_bytes == 480, "peak is a high-water mark"
+
+
+# --- StreamTable operators vs in-memory twins --------------------------------
+
+
+def _stream_fixture(rng, n=10000):
+    t = Table({
+        "k": rng.integers(-200, 200, n).astype(np.int32),
+        "v": rng.integers(0, 1000, n).astype(np.int32),
+        "w": rng.standard_normal(n).astype(np.float32),
+    })
+    budget = MemoryBudget(24 * 1024)
+    return t, StreamTable.from_table(t, budget)
+
+
+def _tables_equal(a: Table, b: Table):
+    assert a.column_names == b.column_names
+    for name in a.column_names:
+        assert np.array_equal(np.asarray(a.column(name)),
+                              np.asarray(b.column(name))), name
+
+
+def test_stream_order_by_matches_in_memory(rng):
+    t, st = _stream_fixture(rng)
+    by = [("k", "asc"), ("v", "desc")]
+    res = order_by(st, by)
+    assert isinstance(res, StreamTable), "streaming in, streaming out"
+    _tables_equal(res.to_table(), order_by(t, by))
+    assert st.budget.peak_bytes <= st.budget.limit_bytes
+    res.close()
+
+
+def test_stream_order_by_result_is_reiterable(rng):
+    t, st = _stream_fixture(rng, n=6000)
+    res = order_by(st, "k")
+    first = res.to_table()
+    second = res.to_table()  # spilled runs: reading twice must work
+    _tables_equal(first, second)
+    res.close()
+
+
+def test_stream_group_by_matches_in_memory(rng):
+    t, st = _stream_fixture(rng)
+    aggs = {"s": ("v", "sum"), "c": (None, "count"),
+            "mn": ("v", "min"), "mx": ("w", "max")}
+    _tables_equal(group_by(st, "k", aggs), group_by(t, "k", aggs))
+
+
+def test_stream_group_by_all_equal_keys(rng):
+    """One group split across every partition chunk: the boundary merge
+    must fold the partials back into a single row."""
+    n = 9000
+    t = Table({"k": np.zeros(n, np.int32),
+               "v": rng.integers(0, 100, n).astype(np.int32)})
+    st = StreamTable.from_table(t, MemoryBudget(2048))
+    aggs = {"s": ("v", "sum"), "c": (None, "count")}
+    res = group_by(st, "k", aggs)
+    assert res.num_rows == 1
+    assert int(np.asarray(res.column("s"))[0]) == int(t.column("v").sum())
+    assert int(np.asarray(res.column("c"))[0]) == n
+
+
+def test_stream_group_by_code_identity_at_boundaries(rng):
+    """Boundary groups merge by ENCODED code, not decoded value: -0.0 and
+    0.0 are distinct float32 codes (two groups), while NaN keys share a
+    code (one group) — exactly the in-memory operator's segments."""
+    n = 6000
+    t = Table({"k": np.where(np.arange(n) % 2 == 0, -0.0, 0.0)
+               .astype(np.float32),
+               "v": np.ones(n, np.int32)})
+    st = StreamTable.from_table(t, MemoryBudget(2048))
+    aggs = {"c": (None, "count")}
+    _tables_equal(group_by(st, "k", aggs), group_by(t, "k", aggs))
+    tn = Table({"k": np.full(n, np.nan, np.float32),
+                "v": np.ones(n, np.int32)})
+    stn = StreamTable.from_table(tn, MemoryBudget(2048))
+    res = group_by(stn, "k", aggs)
+    assert res.num_rows == 1 and int(np.asarray(res.column("c"))[0]) == n
+
+
+def test_stream_top_k_matches_in_memory(rng):
+    t, st = _stream_fixture(rng)
+    by = [("v", "desc"), ("k", "asc")]
+    for k in (1, 37, 1000):
+        _tables_equal(top_k(st, by, k), top_k(t, by, k))
+
+
+class _CountingStore(RunStore):
+    def __init__(self):
+        super().__init__()
+        self.rows_put = 0
+
+    def put(self, *arrays):
+        self.rows_put += int(arrays[0].shape[0])
+        return super().put(*arrays)
+
+
+def test_stream_top_k_prunes_spill_and_never_loads_skipped_runs(rng):
+    """The MSD histogram proves which partitions can reach rank k; the
+    rest are never spilled and never loaded — counted, not eyeballed."""
+    from repro.stream import stream_top_k
+
+    n = 16000
+    t = Table({"k": rng.integers(0, 1 << 30, n).astype(np.int32),
+               "v": rng.integers(0, 10, n).astype(np.int32)})
+    st = StreamTable.from_table(t, MemoryBudget(8 * 1024))
+    store = _CountingStore()
+    res = stream_top_k(st, "k", 50, store=store)
+    _tables_equal(res, top_k(t, "k", 50))
+    assert store.rows_put < n // 2, (
+        f"pruning must skip most partitions at spill time "
+        f"(spilled {store.rows_put}/{n} rows)")
+    loaded = set(store.get_log)
+    assert loaded <= set(store.put_log), "loads only of spilled runs"
+    store.close()
+
+
+def test_stream_table_from_chunks_callable(rng):
+    n = 5000
+    k = rng.integers(0, 100, n).astype(np.int32)
+    v = rng.standard_normal(n).astype(np.float32)
+
+    def chunks():
+        for lo in range(0, n, 700):
+            yield Table({"k": k[lo:lo + 700], "v": v[lo:lo + 700]})
+
+    st = StreamTable(chunks, MemoryBudget(4 * 1024))
+    assert st.column_names == ("k", "v")
+    assert st.num_rows_streamed() == n
+    ref = order_by(Table({"k": k, "v": v}), "k")
+    res = order_by(st, "k")
+    _tables_equal(res.to_table(), ref)
+    res.close()
+
+
+# --- external sort with a caller-provided store ------------------------------
+
+
+def test_external_sort_caller_store_left_open(rng, tmp_path):
+    keys = _dist_keys(rng, "uniform", 10000, 16)
+    store = RunStore(str(tmp_path / "spill"))
+    budget = MemoryBudget(4 * 1024)
+    out = np.concatenate(list(external_sort(
+        ArraySource(keys, budget.rows(8)), 16, budget, store=store)))
+    assert np.array_equal(out, np.sort(keys))
+    assert len(store) == 0, "fragments are dropped as partitions finish"
+    store.close()
