@@ -16,13 +16,31 @@ Modes (``python -m benchmarks.bench_stream <mode>``):
   an in-process correctness + budget assert, recorded to
   ``BENCH_stream.json`` (schema 1, provenance-stamped like
   ``BENCH_sort.json``) — the CI guard for the streaming subsystem.
+* ``distributed-smoke`` — the same shape through the device placement:
+  4 simulated host devices, partition fragments placed by mesh
+  ``all_to_all`` (:class:`~repro.stream.device_store.DeviceShardStore`)
+  and partition sorts through the DistributedBackend pairs path, with a
+  bit-exactness assert against the disk path, a hard wall, and a >2×
+  relative regression gate against the committed
+  ``BENCH_distributed.json``.
 """
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
+
+# The simulated-device count must be pinned before jax initialises, so
+# the distributed mode claims its flags at import time (JAX_PLATFORMS
+# keeps the child off any accelerator plugin the image ships).
+DIST_SMOKE_DEVICES = 4
+if __name__ == "__main__" and "distributed-smoke" in sys.argv[1:2]:
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={DIST_SMOKE_DEVICES}")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
 import jax.numpy as jnp
@@ -125,9 +143,119 @@ def smoke(path: str = "BENCH_stream.json") -> dict:
     return record
 
 
+# Hard wall for the distributed smoke point: the 4-simulated-device
+# external sort pays per-eff-bits shard_map traces on top of the disk
+# path's, all on one CI core; the wall still leaves several x of
+# headroom over the reference host before a collective-path regression
+# trips it.
+DIST_SMOKE_BUDGET_S = 240.0
+DIST_SMOKE_REGRESSION_FACTOR = 2.0
+DIST_SMOKE_REGRESSION_FLOOR_S = 0.5
+_DIST_N = 1 << 17
+_DIST_BUDGET_BYTES = _DIST_N * 4 // 8  # dataset = exactly 8x the budget
+DISTRIBUTED_JSON_SCHEMA = 1
+
+
+def _baseline_wall(path: str):
+    """Committed distributed smoke wall (None: no baseline yet)."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    pts = [pt for pt in rec.get("points", []) if pt.get("smoke_guard")]
+    return pts[0]["wall_s"] if pts else None
+
+
+def distributed_smoke(path: str = "BENCH_distributed.json") -> dict:
+    """The 8×-budget external sort with partition fragments ON THE MESH:
+    4 simulated host devices, fragments placed by bucket ``all_to_all``,
+    partition sorts through the DistributedBackend pairs path.  Asserts
+    bit-exactness against the disk placement in-process, enforces a hard
+    wall plus a >2× relative gate against the committed baseline, and
+    records the point (provenance-stamped) to ``BENCH_distributed.json``.
+    """
+    from repro.stream import DeviceShardStore
+
+    n_dev = len(jax.devices())
+    assert n_dev == DIST_SMOKE_DEVICES, (
+        f"distributed smoke needs {DIST_SMOKE_DEVICES} simulated devices, "
+        f"got {n_dev} — run as `python -m benchmarks.bench_stream "
+        "distributed-smoke` (the mode pins XLA_FLAGS before jax loads)")
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 1 << 32, _DIST_N, dtype=np.uint64) \
+        .astype(np.uint32)
+    budget = MemoryBudget(_DIST_BUDGET_BYTES)
+    src = ArraySource(keys, budget.rows(_ROW_COST))
+
+    disk = np.concatenate(list(external_sort(
+        src, 32, MemoryBudget(_DIST_BUDGET_BYTES))))
+
+    store = DeviceShardStore()
+    t0 = time.perf_counter()
+    chunks = list(external_sort(src, 32, budget, store=store))
+    wall = time.perf_counter() - t0
+    out = np.concatenate(chunks)
+
+    assert np.array_equal(out, disk), (
+        "device placement output differs from the disk placement")
+    assert np.array_equal(out, np.sort(keys)), "device external sort wrong"
+    devices_used = sorted({d for _, d in store.device_log})
+    assert len(devices_used) > 1, (
+        f"fragments landed on {devices_used}: the mesh placement is not "
+        "actually distributing")
+    assert budget.peak_bytes <= budget.limit_bytes, (
+        f"peak {budget.peak_bytes} B over the {budget.limit_bytes} B budget")
+
+    pt = {
+        "n": _DIST_N,
+        "p": 32,
+        "devices": n_dev,
+        "budget_bytes": _DIST_BUDGET_BYTES,
+        "ratio_to_budget": keys.nbytes / _DIST_BUDGET_BYTES,
+        "chunks": len(chunks),
+        "fragments_placed": len(store.device_log),
+        "devices_used": devices_used,
+        "wall_s": wall,
+        "keys_per_s": _DIST_N / wall,
+        "peak_resident_bytes": budget.peak_bytes,
+        "smoke_guard": True,
+    }
+    row(f"stream/distributed-smoke/n{_DIST_N}/d{n_dev}", wall,
+        f"budget_s={DIST_SMOKE_BUDGET_S} frags={pt['fragments_placed']} "
+        f"devices={devices_used}")
+
+    baseline = _baseline_wall(path)
+    record = {
+        "schema": DISTRIBUTED_JSON_SCHEMA,
+        "provenance": _provenance(),
+        "points": [pt],
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    if wall > DIST_SMOKE_BUDGET_S:
+        raise SystemExit(
+            f"distributed smoke point took {wall:.1f}s > "
+            f"{DIST_SMOKE_BUDGET_S}s budget: a collective-path regression "
+            "landed")
+    if baseline is not None:
+        limit = max(DIST_SMOKE_REGRESSION_FACTOR * baseline,
+                    DIST_SMOKE_REGRESSION_FLOOR_S)
+        row(f"stream/distributed-guard/n{_DIST_N}/d{n_dev}", wall,
+            f"baseline_s={baseline:.3f} limit_s={limit:.3f}")
+        if wall > limit:
+            raise SystemExit(
+                f"distributed smoke regressed: {wall:.3f}s vs "
+                f"{baseline:.3f}s committed (limit {limit:.3f}s)")
+    return record
+
+
 if __name__ == "__main__":
     mode = sys.argv[1] if len(sys.argv) > 1 else None
     if mode == "smoke":
         smoke()
+    elif mode == "distributed-smoke":
+        distributed_smoke()
     else:
         run()

@@ -63,4 +63,6 @@ from repro.core.distributed import (
     distributed_fractal_sort,
     make_distributed_argsort,
     make_distributed_sort,
+    make_distributed_sort_pairs,
+    make_fragment_placer,
 )

@@ -56,7 +56,15 @@ __all__ = [
     "distributed_fractal_argsort",
     "make_distributed_argsort",
     "make_distributed_sort",
+    "make_distributed_sort_pairs",
+    "make_fragment_placer",
 ]
+
+#: Distributed plans default to the paper's wide two-field ICI scheme:
+#: every extra pass costs one more all_to_all round, and the local rank of
+#: a 2**16-bin field routes through the scatter engine, so 16-bit digits
+#: (<= 2 passes for p <= 32) win on the wire.
+DISTRIBUTED_MAX_BINS_LOG2 = 16
 
 
 def _distributed_pass(u: jnp.ndarray, shift: int, bits: int, axis: str,
@@ -160,15 +168,22 @@ def _sort_body(keys, plan, axis: str, capacity: int, batch: int,
 def _make_distributed(body_fn, mesh, axis: str, p: int,
                       capacity_factor: Optional[float],
                       batch: int, taper_wire: bool,
-                      max_bins_log2: Optional[int]):
+                      max_bins_log2: Optional[int],
+                      num_payloads: int = 0, payloads_out: int = 0):
     """Shared scaffolding for the distributed entry points: plan build,
-    the capacity/overflow rule, and the shard_map wrapping — so sort and
-    argsort can never diverge on them.  ``body_fn`` runs inside the
-    shard_map region and returns ``(per-shard output, overflow)``."""
+    the capacity/overflow rule, and the shard_map wrapping — so sort,
+    argsort and the pairs sort can never diverge on them.  ``body_fn``
+    runs inside the shard_map region over ``1 + num_payloads`` sharded
+    inputs (keys first) and returns ``1 + payloads_out`` sharded outputs
+    plus the replicated overflow flag."""
     D = mesh.shape[axis]
     cf = capacity_factor if capacity_factor is not None else float(D)
+    if max_bins_log2 is None:
+        max_bins_log2 = DISTRIBUTED_MAX_BINS_LOG2
 
-    def fn(keys):
+    def fn(keys, *payloads):
+        assert len(payloads) == num_payloads, (
+            f"expected {num_payloads} payload columns, got {len(payloads)}")
         n = keys.shape[0]
         plan = make_sort_plan(n, p, max_bins_log2=max_bins_log2)
         cap = min(int(cf * (n // D) / D) + 1, n // D)
@@ -177,9 +192,9 @@ def _make_distributed(body_fn, mesh, axis: str, p: int,
             taper_wire=taper_wire)
         return compat.shard_map(
             body, mesh=mesh,
-            in_specs=P(axis),
-            out_specs=(P(axis), P()),
-        )(keys)
+            in_specs=(P(axis),) * (1 + num_payloads),
+            out_specs=(P(axis),) * (1 + payloads_out) + (P(),),
+        )(keys, *payloads)
 
     return fn
 
@@ -197,8 +212,9 @@ def make_distributed_sort(mesh, axis: str, p: int,
     axis size (worst-case-safe); pass e.g. 2.0 to shrink the all_to_all
     buffers for known-low-duplication keys.  ``max_bins_log2`` bounds the
     per-pass bin count via the SortPlan digit decomposition (each extra
-    pass costs one more all_to_all; on real ICI fewer/wider passes win —
-    pass 16 for the paper's two-field scheme).
+    pass costs one more all_to_all round, so the wide two-field scheme —
+    :data:`DISTRIBUTED_MAX_BINS_LOG2` — is the default; local wide ranks
+    route through the scatter engine).
     """
     return _make_distributed(_sort_body, mesh, axis, p, capacity_factor,
                              batch, taper_wire, max_bins_log2)
@@ -247,3 +263,102 @@ def make_distributed_argsort(mesh, axis: str, p: int,
 def distributed_fractal_argsort(keys, mesh, axis: str, p: int, **kw):
     """One-shot convenience wrapper around :func:`make_distributed_argsort`."""
     return make_distributed_argsort(mesh, axis, p, **kw)(keys)
+
+
+def _pairs_body(keys, *payloads, plan, axis: str, capacity: int, batch: int,
+                taper_wire: bool):
+    """Executor pairs run over the DistributedBackend: keys *and* every
+    payload column ride the same all_to_all buckets through every pass
+    (``DistributedBackend.lsd_pass_pairs``), so the outputs are the keys
+    at their exact global ranks with each payload next to its key.  Runs
+    inside the shard_map region."""
+    backend = DistributedBackend(axis=axis, capacity=capacity, batch=batch,
+                                 taper_wire=taper_wire)
+    out_keys, out_payloads = PlanExecutor(backend).run_pairs(
+        keys, tuple(payloads), plan)
+    overflow = (backend.overflow if backend.overflow is not None
+                else jnp.zeros((), jnp.bool_))
+    return (out_keys.astype(keys.dtype), *out_payloads, overflow)
+
+
+def make_distributed_sort_pairs(mesh, axis: str, p: int,
+                                num_payloads: int = 1,
+                                capacity_factor: Optional[float] = None,
+                                batch: int = 1024,
+                                taper_wire: bool = True,
+                                max_bins_log2: Optional[int] = None):
+    """Build a jit-able distributed key–value sort over ``mesh[axis]``.
+
+    Returns ``fn(keys_global, *payloads_global) -> (sorted_keys,
+    *payloads_in_sorted_key_order, overflow)`` — the distributed twin of
+    :meth:`~repro.core.executor.PlanExecutor.run_pairs`, with every
+    payload column routed through one extra all_to_all per pass alongside
+    the keys.  Same sharding/capacity rules as
+    :func:`make_distributed_sort`; stability is (device, arrival) order,
+    so an int32 arrival-index payload comes back as the stable
+    permutation.  This is the pass the distributed StreamTable operators
+    bottom out in: each histogram partition's rows sort here with their
+    row permutation riding as the payload.
+    """
+    return _make_distributed(_pairs_body, mesh, axis, p, capacity_factor,
+                             batch, taper_wire, max_bins_log2,
+                             num_payloads=num_payloads,
+                             payloads_out=num_payloads)
+
+
+def make_fragment_placer(mesh, axis: str, num_words: int,
+                         batch: int = 1024):
+    """Build the chunk→device fragment-placement collective of the
+    distributed external sort.
+
+    Returns ``fn(words_global (t, num_words) uint32, dest_global (t,)
+    int32, tag_global (t,) int32) -> (landed_words (D*t, num_words),
+    landed_tags (D*t,))``: every row travels to device ``dest[i]`` via
+    one bucket ``all_to_all`` per word column (plus one for the tags),
+    replacing the disk path's per-partition spill with mesh placement.
+    Rows with ``dest < 0`` (pruned partitions) are dropped on the wire —
+    they never land anywhere.  Device ``d``'s landing buffer is the
+    global slice ``[d*t, (d+1)*t)``; slots with ``tag < 0`` are empty
+    padding, and valid rows appear in (source device, arrival) order —
+    i.e. global arrival order, since shards are contiguous arrival
+    ranges — so fragment stability is free.
+
+    Bucket capacity is the full local shard (``t // D``): one source
+    device can address all of its rows to a single destination, and at
+    that capacity overflow is impossible — placement needs no retry
+    contract.  The landing buffer is D× the chunk (each device can in
+    the worst case receive *every* row); chunks are budget-sized, so
+    this is a bounded constant, not a dataset-scale cost.
+    """
+    D = mesh.shape[axis]
+
+    def body(words, dest, tag):
+        n_local = dest.shape[0]
+        # dest < 0 → row index D, out of the send buffer's range: dropped
+        safe = jnp.where(dest >= 0, dest, D)
+        rank, counts, _ = fractal_rank(safe, D + 1, batch=batch)
+        start = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+        pos = rank - start[safe]
+
+        def route(vals, fill):
+            send = jnp.full((D, n_local), fill, vals.dtype).at[
+                safe, pos].set(vals, mode="drop")
+            return jax.lax.all_to_all(send, axis, split_axis=0,
+                                      concat_axis=0).reshape(-1)
+
+        landed_tag = route(tag, -1)
+        landed_words = jnp.stack(
+            [route(words[:, j], jnp.uint32(0)) for j in range(num_words)],
+            axis=1)
+        return landed_words, landed_tag
+
+    def fn(words, dest, tag):
+        assert words.ndim == 2 and words.shape[1] == num_words
+        return compat.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis)),
+        )(words, dest, tag)
+
+    return fn

@@ -329,36 +329,45 @@ class PlanExecutor:
 
     # -- key–value (pairs) sort ---------------------------------------------
 
-    def run_pairs(self, keys: jnp.ndarray, values: jnp.ndarray,
-                  plan: SortPlan):
-        """Sort ``(keys, values)`` pairs by key: every LSD pass carries the
+    def run_pairs(self, keys: jnp.ndarray, values, plan: SortPlan):
+        """Sort key–payload pairs by key: every LSD pass carries the
         payload alongside the keys, and the final fractal MSD pass scatters
         the payload next to the compressed trailing-bit entries — the
         prefix bits are still reconstructed from bin positions (Alg. 5),
-        only the payload and trailing bits travel.  Returns
-        ``(sorted_keys, values_in_sorted_key_order)``; ties keep arrival
+        only the payload and trailing bits travel.  ``values`` is one
+        payload array, or a tuple of payload arrays all carried through
+        the same passes (the distributed StreamTable path rides several
+        columns at once).  Returns ``(sorted_keys,
+        values_in_sorted_key_order)`` with values shaped like the input
+        (array in, array out; tuple in, tuple out); ties keep arrival
         order (stable), which is what the query operators lean on for
         multi-word keys and reproducible joins."""
+        single = not isinstance(values, tuple)
+        payloads = (values,) if single else tuple(values)
         self.backend.begin_run()
         if keys.shape[0] == 0 or not plan.passes:
             return keys, values  # empty input, or the p=0 identity plan
         u = keys.astype(jnp.uint32)
         for dp in plan.passes[:-1]:
-            u, values = self.backend.lsd_pass_pairs(u, (values,), dp)
+            u, *payloads = self.backend.lsd_pass_pairs(u, tuple(payloads),
+                                                       dp)
         last = plan.passes[-1]
         if not self.backend.reconstructs:
-            return self.backend.lsd_pass_pairs(u, (values,), last)
+            u, *payloads = self.backend.lsd_pass_pairs(u, tuple(payloads),
+                                                       last)
+            return u, (payloads[0] if single else tuple(payloads))
         rank, counts, _ = self.backend.rank(
             _digit_of(u, last), last.n_bins,
             batch_hint=last.rank_batch(self.backend.rank_base),
             engine=last.engine)
         if last.shift:
-            trailing, values = self.backend.scatter(
-                rank, u & jnp.uint32((1 << last.shift) - 1), values)
+            trailing, *payloads = self.backend.scatter(
+                rank, u & jnp.uint32((1 << last.shift) - 1), *payloads)
         else:
-            (values,) = self.backend.scatter(rank, values)
+            payloads = self.backend.scatter(rank, *payloads)
             trailing = jnp.zeros_like(u)
-        return self.backend.reconstruct(counts, trailing, plan), values
+        keys_out = self.backend.reconstruct(counts, trailing, plan)
+        return keys_out, (payloads[0] if single else tuple(payloads))
 
     # -- argsort ------------------------------------------------------------
 

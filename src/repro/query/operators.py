@@ -107,30 +107,41 @@ def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
 
 
 @functools.lru_cache(maxsize=256)
-def _rowid_chain(widths: Tuple[int, ...], plans: Tuple[SortPlan, ...]):
-    """One jitted pass chain per (word widths, per-word plans).
+def _rowid_chain(active: Tuple[Tuple[int, int], ...],
+                 plans: Tuple[SortPlan, ...], pairs_path: bool):
+    """One jitted pass chain per (active words, per-word plans) config.
 
     Multi-word codes (>32-bit composites, float64) used to retrace and
     dispatch one executor run *per word* from Python — `order_by` paid
     per-word host orchestration on every call.  The whole chain (argsort
-    word W-1 → permute → argsort word W-2 → …) now traces once into a
+    last active word → permute → next word up → …) now traces once into a
     single jitted function, cached here by its static configuration; jax's
-    own jit cache then specializes per input shape.  Single-word codes jit
-    the one pairs run the same way.
+    own jit cache then specializes per input shape.
+
+    ``active`` lists ``(word index, undetermined low bits)`` pairs, MSB
+    word first — the narrowed-partition path skips fully-shared words and
+    sorts the boundary word on only its undetermined low bits.
+    ``pairs_path`` (full-width single-word codes only) runs the executor
+    pairs plan instead, where row ids ride the scatter path and the MSD
+    pass *reconstructs* prefix bits from bin positions — valid only when
+    the sort covers every code bit, since reconstruction rebuilds exactly
+    the sorted ``p`` bits and would zero a narrowed sort's shared prefix.
     """
-    assert len(widths) == len(plans)
+    assert len(active) == len(plans)
 
     @jax.jit
     def chain(words):
         n = words.shape[0]
         ex = PlanExecutor(JnpBackend())
-        if len(widths) == 1:
+        if pairs_path:
             sorted_keys, rowids = ex.run_pairs(
                 words[:, 0], jnp.arange(n, dtype=jnp.int32), plans[0])
             return sorted_keys.astype(jnp.uint32)[:, None], rowids
         perm = jnp.arange(n, dtype=jnp.int32)
-        for j in range(len(widths) - 1, -1, -1):
-            sub = ex.run_argsort(words[perm, j], plans[j])
+        for (j, _), plan in zip(reversed(active), reversed(plans)):
+            # plan covers the word's undetermined low bits; higher bits
+            # are row-invariant here, so digit passes never see them
+            sub = ex.run_argsort(words[perm, j], plan)
             perm = perm[sub]
         return words[perm], perm
 
@@ -138,50 +149,84 @@ def _rowid_chain(widths: Tuple[int, ...], plans: Tuple[SortPlan, ...]):
 
 
 def sort_rowids(words: jnp.ndarray, bits: int,
-                plans: Optional[Tuple[SortPlan, ...]] = None):
+                plans: Optional[Tuple[SortPlan, ...]] = None,
+                low_bits: Optional[int] = None):
     """Stably sort multi-word codes: ``(sorted_words, rowids)``.
 
-    Single-word codes run one executor pairs plan (row ids ride the
-    scatter path, prefix bits reconstructed on the MSD pass).  Multi-word
-    codes chain one stable argsort per 32-bit word, least-significant
-    first — stability makes the composition lexicographic, i.e. numeric
-    on the full code.  The whole chain runs as one jitted dispatch
-    (:func:`_rowid_chain`).
+    Full-width single-word codes run one executor pairs plan (row ids
+    ride the scatter path, prefix bits reconstructed on the MSD pass).
+    Everything else chains one stable argsort per 32-bit word,
+    least-significant word first — stability makes the composition
+    lexicographic, i.e. numeric on the full code.  The whole chain runs
+    as one jitted dispatch (:func:`_rowid_chain`).
 
-    ``plans`` pins per-word :class:`SortPlan`\\ s (one per word of the
-    code); by default each word resolves through the per-host autotune
-    cache (:func:`~repro.core.autotune.tuned_plan`), so codec-driven key
-    widths get wide scatter-engine passes wherever the host's sweep found
-    them faster.
+    ``low_bits`` narrows the sort to the undetermined low code bits when
+    every row provably shares bits ``[low_bits, bits)`` — the external
+    sort's partitions, whose shared MSD prefix is implied by their bin
+    range.  Fully-shared words drop out of the chain entirely and the
+    boundary word sorts on only its undetermined bits, cutting pass work
+    by ~``(bits - low_bits) / bits`` (the ROADMAP's ~1/3 at p=32 under
+    10 partition bits).  ``low_bits == 0`` (all bits shared) returns
+    arrival order — already the stable sorted order.
+
+    ``plans`` pins per-word :class:`SortPlan`\\ s (one per *active* word
+    of the code); by default each active word resolves through the
+    per-host autotune cache (:func:`~repro.core.autotune.tuned_plan`), so
+    codec-driven key widths get wide scatter-engine passes wherever the
+    host's sweep found them faster.
     """
     widths = word_widths(bits)
     n = words.shape[0]
+    low_bits = bits if low_bits is None else int(low_bits)
+    assert 0 <= low_bits <= bits, f"low_bits={low_bits} not in 0..{bits}"
     if n == 0:
         return words, jnp.zeros((0,), jnp.int32)
+    # word j covers code bits [lo_j, lo_j + widths[j]); its undetermined
+    # low bits are those below low_bits
+    active, lo = [], bits
+    for j, wj in enumerate(widths):
+        lo -= wj
+        eff = min(low_bits - lo, wj)
+        if eff > 0:
+            active.append((j, eff))
+    if not active:
+        # every code bit shared: arrival order is the stable sorted order
+        return words, jnp.arange(n, dtype=jnp.int32)
     if plans is None:
         from repro.core.autotune import tuned_plan
 
-        plans = tuple(tuned_plan(n, w) for w in widths)
-    assert len(plans) == len(widths), (
-        f"{len(widths)}-word code needs {len(widths)} plans, "
+        plans = tuple(tuned_plan(n, eff) for _, eff in active)
+    assert len(plans) == len(active), (
+        f"{len(active)} active words need {len(active)} plans, "
         f"got {len(plans)}")
-    return _rowid_chain(widths, tuple(plans))(words)
+    pairs_path = len(widths) == 1 and active[0][1] == widths[0]
+    return _rowid_chain(tuple(active), tuple(plans), pairs_path)(words)
 
 
 def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
-             plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
+             plans: Optional[Tuple[SortPlan, ...]] = None,
+             placement=None) -> Table:
     """Multi-column ORDER BY (stable): rows reordered by one gather of the
     pairs sort's row-id payload.  ``plans`` pins per-word sort plans
     (default: the host's tuned plans for the codec's word widths).
 
     A StreamTable input runs out-of-core and returns a StreamTable of
-    sorted runs (:func:`~repro.stream.table_ops.stream_order_by`)."""
+    sorted runs (:func:`~repro.stream.table_ops.stream_order_by`);
+    ``placement`` (StreamTable only) is the
+    :class:`~repro.stream.chunks.PlacementStore` holding the working
+    partition fragments — pass a
+    :class:`~repro.stream.device_store.DeviceShardStore` to run the sort
+    distributed over a jax mesh."""
     stream = _stream_ops(table)
     if stream is not None:
         assert plans is None, (
             "pinned plans don't apply out-of-core: each partition "
             "resolves tuned plans for its own length")
-        return stream.stream_order_by(table, by, codecs)
+        return stream.stream_order_by(table, by, codecs,
+                                      placement=placement)
+    assert placement is None, (
+        "placement is the out-of-core fragment store; an in-memory Table "
+        "sorts in place — wrap it in a StreamTable to place on a mesh")
     codec, words = _composite_for(table, by, codecs)
     _, rowids = sort_rowids(words, codec.bits, plans)
     return table.take(rowids)
@@ -195,7 +240,8 @@ _TOPK_PRUNE_BITS = 10
 
 def top_k(table: Table, by, k: int,
           codecs: Optional[Mapping[str, Codec]] = None,
-          plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
+          plans: Optional[Tuple[SortPlan, ...]] = None,
+          placement=None) -> Table:
     """First ``k`` rows of the stable ORDER BY (ties keep arrival order),
     *without* the full sort: one MSD histogram over the code's leading
     digit finds the smallest digit value ``cut`` whose cumulative count
@@ -217,7 +263,10 @@ def top_k(table: Table, by, k: int,
         assert plans is None, (
             "pinned plans don't apply out-of-core: each partition "
             "resolves tuned plans for its own length")
-        return stream.stream_top_k(table, by, k, codecs)
+        return stream.stream_top_k(table, by, k, codecs, store=placement)
+    assert placement is None, (
+        "placement is the out-of-core fragment store; an in-memory Table "
+        "sorts in place — wrap it in a StreamTable to place on a mesh")
     if k <= 0:
         return table.head(0)
     codec, words = _composite_for(table, by, codecs)
@@ -301,7 +350,8 @@ _AGG_UFUNC = {"sum": np.add, "min": np.minimum, "max": np.maximum}
 
 def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
              codecs: Optional[Mapping[str, Codec]] = None,
-             plans: Optional[Tuple[SortPlan, ...]] = None) -> Table:
+             plans: Optional[Tuple[SortPlan, ...]] = None,
+             placement=None) -> Table:
     """GROUP BY + aggregation from segment boundaries of the sorted key.
 
     One pairs sort groups equal keys into contiguous segments; every
@@ -318,7 +368,11 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
         assert plans is None, (
             "pinned plans don't apply out-of-core: each partition "
             "resolves tuned plans for its own length")
-        return stream.stream_group_by(table, by, aggs, codecs)
+        return stream.stream_group_by(table, by, aggs, codecs,
+                                      placement=placement)
+    assert placement is None, (
+        "placement is the out-of-core fragment store; an in-memory Table "
+        "sorts in place — wrap it in a StreamTable to place on a mesh")
     by = _normalize_by(by)
     codec, words = _composite_for(table, by, codecs)
     sorted_words, rowids = sort_rowids(words, codec.bits, plans)

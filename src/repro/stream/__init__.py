@@ -17,6 +17,10 @@ fractal compressed histogram as a distribution-adaptive MSD partitioner
   :func:`external_argsort`: each partition routes through the existing
   :class:`~repro.core.executor.PlanExecutor`; partitions are disjoint
   key ranges, so concatenation (not k-way merge) is the total order;
+* :mod:`~repro.stream.device_store` — :class:`DeviceShardStore`, the
+  device placement: fragments land on a jax mesh via one ``all_to_all``
+  and partitions sort through the DistributedBackend pairs path
+  ("shards are runs" — same loop, two placements);
 * :mod:`~repro.stream.merge` — stable k-way merge of pre-sorted runs,
   the pure-streaming path when a re-partition pass is not possible;
 * :mod:`~repro.stream.table_ops` — :class:`StreamTable` and the
@@ -29,9 +33,12 @@ from repro.stream.chunks import (
     ChunkSource,
     GeneratorSource,
     MemoryBudget,
+    PlacementStore,
     RunSource,
     RunStore,
+    temp_store,
 )
+from repro.stream.device_store import DeviceShardStore
 from repro.stream.partition import (
     KeyPartition,
     partition_bins,

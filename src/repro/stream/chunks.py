@@ -1,10 +1,22 @@
-"""Chunk streams, the byte budget, and the on-disk run store.
+"""Chunk streams, the byte budget, and the fragment placement stores.
 
 The out-of-core sort never holds more than a budgeted number of bytes of
 key/payload data resident: inputs arrive as a :class:`ChunkSource` (a
 re-iterable stream of budget-sized pieces), intermediate partition
-fragments and sorted runs spill to a numpy-backed :class:`RunStore`, and
-every sizing decision comes from one :class:`MemoryBudget`.
+fragments and sorted runs go to a :class:`PlacementStore`, and every
+sizing decision comes from one :class:`MemoryBudget`.
+
+:class:`PlacementStore` is the *placement* contract of the partitioned
+sort: the histogram → partition → per-partition-sort loop in
+:mod:`~repro.stream.external` only ever asks a store to *distribute* a
+chunk's rows into partition fragments, *get* a partition's fragments
+back, and *sort* one partition's rows — never where those fragments
+physically live.  :class:`RunStore` is the disk implementation (one
+``.npy`` per array, spill-and-reload); :class:`~repro.stream.
+device_store.DeviceShardStore` is the device implementation (fragments
+placed onto a jax mesh via one ``all_to_all`` per chunk, partition sorts
+through the DistributedBackend pairs path).  Same loop, two placements —
+"shards are runs".
 
 The budget is also the subsystem's *allocation tracker*: every point that
 materializes key/payload arrays charges them (:meth:`MemoryBudget.charge`),
@@ -18,8 +30,9 @@ import dataclasses
 import os
 import shutil
 import tempfile
+import threading
 import weakref
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -28,9 +41,17 @@ __all__ = [
     "ChunkSource",
     "GeneratorSource",
     "MemoryBudget",
+    "PlacementStore",
     "RunSource",
     "RunStore",
+    "temp_store",
 ]
+
+
+def temp_store() -> "PlacementStore":
+    """A fresh private disk-backed store — the default placement when a
+    caller doesn't supply one (the external sort's own working spill)."""
+    return RunStore()
 
 
 @dataclasses.dataclass
@@ -54,6 +75,8 @@ class MemoryBudget:
     limit_bytes: int
     headroom: int = 2
     peak_bytes: int = dataclasses.field(default=0, compare=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, compare=False, repr=False)
 
     def __post_init__(self):
         assert self.limit_bytes >= 1, f"budget {self.limit_bytes} bytes"
@@ -67,10 +90,13 @@ class MemoryBudget:
     def charge(self, *arrays) -> int:
         """Record simultaneously-resident key/payload arrays; returns the
         moment's byte total and updates :attr:`peak_bytes`.  (``nbytes``
-        is read off the array object — numpy or jnp — never via a
-        copy.)"""
+        is read off the array object — numpy or jnp — never via a copy.)
+        Thread-safe: the overlapped spill path charges from worker
+        threads, and a lost high-water update would make the asserted
+        peak a lie."""
         resident = sum(int(a.nbytes) for a in arrays if a is not None)
-        self.peak_bytes = max(self.peak_bytes, resident)
+        with self._lock:
+            self.peak_bytes = max(self.peak_bytes, resident)
         return resident
 
 
@@ -120,7 +146,135 @@ class GeneratorSource(ChunkSource):
         return iter(self.factory())
 
 
-class RunStore:
+class PlacementStore:
+    """Where partition fragments live — the placement contract of the
+    external sort's one partition loop.
+
+    The paper's architecture (compressed-histogram MSD partition, then
+    independent per-partition sorts) is placement-agnostic, and
+    :func:`~repro.stream.external.stream_sorted_words` speaks only this
+    protocol.  A store decides *where* fragments go and *where* each
+    partition sorts; the loop decides *what* is a fragment and *when* it
+    is sorted:
+
+    * :meth:`put` / :meth:`get` / :meth:`delete` — one fragment (a tuple
+      of equal-length arrays, keys first) in, out, and dropped; every
+      access logged (:attr:`put_log` / :attr:`get_log`) so tests count
+      what was — and crucially, was *never* — touched;
+    * :meth:`distribute` — one chunk's rows routed to their partitions'
+      fragments (the disk default splits on the host and spills;
+      the device store routes via one mesh ``all_to_all``);
+    * :meth:`sort_rows` — one partition's stable in-budget sort (the
+      disk default pads and runs the local executor pass chain; the
+      device store runs the DistributedBackend pairs path);
+    * :meth:`owner` / :meth:`nbytes` — capacity accounting: which
+      placement slot (device) a partition maps to, and the store's
+      resident footprint.
+    """
+
+    #: fragment ids written / read back, in call order (tests assert on
+    #: these; the top-k bar is "pruned fragments never even exist").
+    put_log: List[int]
+    get_log: List[int]
+
+    #: whether :meth:`sort_rows` may be called from several worker
+    #: threads at once (the spill/compute-overlap path).  Collective-
+    #: backed stores say False — concurrent shard_map dispatches from
+    #: host threads would interleave collectives and deadlock.
+    supports_concurrent_sorts: bool = True
+
+    def put(self, *arrays: np.ndarray, partition: Optional[int] = None):
+        """Store one fragment (≥ 1 equal-length arrays, keys first);
+        returns its fragment id.  ``partition`` is the owning partition
+        index when known — placement-aware stores map it to a device."""
+        raise NotImplementedError
+
+    def get(self, rid: int, mmap: bool = False):
+        raise NotImplementedError
+
+    def delete(self, rid: int) -> None:
+        raise NotImplementedError
+
+    def owner(self, partition: int, num_partitions: int) -> Optional[int]:
+        """Placement slot (device index) ``partition`` maps to, or None
+        when the store has a single placement (disk)."""
+        return None
+
+    def nbytes(self) -> int:
+        """Resident footprint of live fragments (disk or device bytes)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def distribute(self, words: np.ndarray, payloads: tuple,
+                   pid: np.ndarray, num_partitions: int) -> list:
+        """Route one chunk's rows to their partitions, preserving arrival
+        order within each partition; returns a per-partition list of the
+        fragment ids written (``num_partitions`` lists).  Rows with
+        ``pid < 0`` (pruned partitions) are dropped.  The disk default is
+        a host-side stable split plus one :meth:`put` per non-empty
+        partition; the device store overrides this with one
+        ``all_to_all`` placing every row on its partition's owner
+        device."""
+        frag_ids: list = [[] for _ in range(num_partitions)]
+        order = np.argsort(pid, kind="stable")  # arrival kept within pid
+        pid_sorted = pid[order]
+        bounds = np.searchsorted(pid_sorted, np.arange(num_partitions + 1))
+        for i in range(num_partitions):
+            rows = order[bounds[i]:bounds[i + 1]]
+            if rows.shape[0]:
+                frag_ids[i].append(self.put(
+                    words[rows], *(p[rows] for p in payloads), partition=i))
+        # pid == -1 rows (pruned partitions) fall before bounds[0]: dropped
+        return frag_ids
+
+    def sort_rows(self, words: np.ndarray, payloads: tuple, bits: int,
+                  sort_bits: int, budget: "MemoryBudget"):
+        """Stable sort of one partition's rows on their low ``sort_bits``
+        undetermined code bits (the shared ``[sort_bits, bits)`` prefix is
+        implied by the partition's bin range — sorting it again would be
+        pure waste).  Rows are padded to the power-of-two ceiling with
+        all-ones codes (greater-or-equal to every real code, arriving
+        later → stably last), so distinct partition lengths share
+        O(log budget) jit traces.  Returns ``(sorted_words, payloads in
+        sorted order)``."""
+        import jax.numpy as jnp
+
+        from repro.core.fractal_tree import ceil_log2
+        from repro.query.operators import sort_rowids
+
+        m = int(words.shape[0])
+        if m <= 1 or sort_bits == 0:
+            return words, payloads
+        target = 1 << ceil_log2(m)
+        padded = words
+        if target > m:
+            padded = np.concatenate(
+                [words, np.full((target - m, words.shape[1]), 0xFFFFFFFF,
+                                np.uint32)])
+        # the sort moment: host padded matrix + its device copy + the
+        # device sorted output are simultaneously alive (charged as 3x)
+        budget.charge(padded, padded, padded, *payloads)
+        sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits,
+                                           low_bits=sort_bits)
+        sorted_words = np.asarray(sorted_words)[:m]
+        rowids = np.asarray(rowids)[:m]
+        # all-ones sentinels sort after every real row, so the first m
+        # sorted slots hold exactly the real rows
+        assert m == target or int(rowids.max(initial=-1)) < m
+        gathered = tuple(np.asarray(p)[rowids] for p in payloads)
+        budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
+        return sorted_words, gathered
+
+    def __enter__(self) -> "PlacementStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class RunStore(PlacementStore):
     """Numpy-backed on-disk store of runs (each a tuple of arrays).
 
     A *run* is whatever one spill wrote: a partition fragment (keys [+
@@ -139,6 +293,7 @@ class RunStore:
         self.root = root or tempfile.mkdtemp(prefix="repro-runstore-")
         os.makedirs(self.root, exist_ok=True)
         self._next_id = 0
+        self._id_lock = threading.Lock()  # overlapped workers also spill
         self._widths: dict = {}  # run id -> number of arrays
         self.put_log: list = []
         self.get_log: list = []
@@ -146,11 +301,15 @@ class RunStore:
             self._cleanup = weakref.finalize(
                 self, shutil.rmtree, self.root, True)
 
-    def put(self, *arrays: np.ndarray) -> int:
-        """Spill one run (≥ 1 arrays); returns its run id."""
+    def put(self, *arrays: np.ndarray,
+            partition: Optional[int] = None) -> int:
+        """Spill one run (≥ 1 arrays); returns its run id.  ``partition``
+        (the owning partition, when the caller knows it) is irrelevant on
+        disk — one placement — and accepted for protocol compatibility."""
         assert arrays, "a run holds at least one array"
-        rid = self._next_id
-        self._next_id += 1
+        with self._id_lock:
+            rid = self._next_id
+            self._next_id += 1
         for j, a in enumerate(arrays):
             np.save(self._path(rid, j), np.ascontiguousarray(a),
                     allow_pickle=False)

@@ -10,16 +10,33 @@ fractal histogram instead of sampled splitters:
    two-phase rank's chunk histograms);
 2. **distribute** — a second read; each chunk's rows route to their
    budget-fitting partition (:func:`~repro.stream.partition.
-   partition_bins`) and spill to the :class:`~repro.stream.chunks.
-   RunStore` as per-partition fragments, arrival order preserved;
+   partition_bins`) and *place* as per-partition fragments through the
+   :class:`~repro.stream.chunks.PlacementStore` (disk spill on the run
+   store, one mesh ``all_to_all`` on
+   :class:`~repro.stream.device_store.DeviceShardStore`), arrival order
+   preserved;
 3. **sort-and-emit** — partitions load one at a time (they fit the
-   budget by prediction), sort through the existing
-   :class:`~repro.core.executor.PlanExecutor` pass chain
-   (:func:`~repro.query.operators.sort_rowids` — tuned plans, stable,
-   multi-word capable), and stream out.  Partitions are disjoint key
-   ranges, so concatenation *is* the stable total order — no k-way
-   merge (that path exists for pre-sorted runs in
-   :mod:`~repro.stream.merge`).
+   budget by prediction), sort through the store's
+   :meth:`~repro.stream.chunks.PlacementStore.sort_rows` (the executor
+   pass chain on disk, the DistributedBackend pairs path on devices),
+   and stream out.  Partitions are disjoint key ranges, so concatenation
+   *is* the stable total order — no k-way merge (that path exists for
+   pre-sorted runs in :mod:`~repro.stream.merge`).
+
+This loop never names a placement: it histograms, plans partitions, and
+asks the store to distribute and sort — "shards are runs".  Two
+placement-independent cuts ride the loop:
+
+* **narrowed partition sorts** — a partition's bin range pins the top
+  bits of its partitioning field (:meth:`~repro.stream.partition.
+  KeyPartition.shared_field_bits`), so each partition sorts only its
+  undetermined low bits (~1/3 of the pass work gone at p=32 under
+  10 partition bits);
+* **overlapped sort + spill I/O** — with ``REPRO_STREAM_WORKERS > 1``
+  (and a store that allows concurrent sorts) upcoming partitions load
+  and sort on a thread pool while earlier ones stream out, overlapping
+  fragment reads with compute; emission order, and therefore output,
+  is bit-identical at any worker count.
 
 A partition the histogram predicts oversized is always a single bin
 (greedy merging never overfills), so every key in it shares that bin's
@@ -30,25 +47,26 @@ arrival order (trivially sorted, stability free).
 Everything here operates on ``(n, W)`` uint32 code-word matrices (the
 query codec layout), so one core serves plain ≤ 32-bit keys
 (:func:`external_sort` / :func:`external_argsort`) and the StreamTable
-operators' arbitrarily wide composite codes.  In-memory partition sorts
-pad to the power-of-two ceiling with all-ones sentinel rows (they sort
-stably *after* every real row), so jit traces stay O(log budget) instead
-of one per ragged partition length.
+operators' arbitrarily wide composite codes.
 """
 
 from __future__ import annotations
 
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Iterator, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import PlanExecutor
-from repro.core.fractal_tree import ceil_log2
 from repro.core.sort_plan import DigitPass
 from repro.query.codec import word_widths
-from repro.query.operators import sort_rowids
-from repro.stream.chunks import ChunkSource, MemoryBudget, RunStore
+from repro.stream.chunks import (
+    ChunkSource,
+    MemoryBudget,
+    PlacementStore,
+    temp_store,
+)
 from repro.stream.partition import (
     DEFAULT_PARTITION_BITS,
     bin_to_partition,
@@ -72,10 +90,20 @@ def row_cost_bytes(num_words: int, payload_bytes: int = 0) -> int:
     ``24 * num_words`` B/row), the padded row ids twice (device + host,
     ~12 B/row), and each payload column twice (spilled + gathered).
     ``MemoryBudget.rows()`` already halves for headroom, so the model
-    here carries half the worst case; :func:`_sort_in_memory` charges the
-    same moments to the tracker, keeping the asserted ``peak_bytes``
+    here carries half the worst case; the store's ``sort_rows`` charges
+    the same moments to the tracker, keeping the asserted ``peak_bytes``
     honest against this sizing."""
     return 12 * num_words + 6 + payload_bytes
+
+
+def _stream_workers() -> int:
+    """Worker threads for the overlapped load+sort path: the
+    ``REPRO_STREAM_WORKERS`` env knob, default 1 (fully sequential).
+    Read per call so tests can flip it without re-importing."""
+    try:
+        return max(1, int(os.environ.get("REPRO_STREAM_WORKERS", "1")))
+    except ValueError:
+        return 1
 
 
 def _extract_field(words: np.ndarray, bits: int, shift: int,
@@ -100,38 +128,9 @@ def _extract_field(words: np.ndarray, bits: int, shift: int,
     return out
 
 
-def _sort_in_memory(words: np.ndarray, payloads: tuple, bits: int,
+def _load_fragments(store: PlacementStore, frag_ids, n_payloads: int,
                     budget: MemoryBudget):
-    """Stable in-memory sort of one partition through the executor pass
-    chain; rows padded to the power-of-two ceiling with all-ones codes
-    (greater-or-equal to every real code, arriving later → stably last),
-    so distinct partition lengths share O(log budget) jit traces."""
-    m = int(words.shape[0])
-    if m <= 1 or bits == 0:
-        return words, payloads
-    target = 1 << ceil_log2(m)
-    padded = words
-    if target > m:
-        padded = np.concatenate(
-            [words, np.full((target - m, words.shape[1]), 0xFFFFFFFF,
-                            np.uint32)])
-    # the sort moment: host padded matrix + its device copy + the device
-    # sorted output are simultaneously alive (charged as 3x padded)
-    budget.charge(padded, padded, padded, *payloads)
-    sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits)
-    sorted_words = np.asarray(sorted_words)[:m]
-    rowids = np.asarray(rowids)[:m]
-    # all-ones sentinels sort after every real row, so the first m sorted
-    # slots hold exactly the real rows
-    assert m == target or int(rowids.max(initial=-1)) < m
-    gathered = tuple(np.asarray(p)[rowids] for p in payloads)
-    budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
-    return sorted_words, gathered
-
-
-def _load_fragments(store: RunStore, frag_ids, n_payloads: int,
-                    budget: MemoryBudget):
-    """One partition back from its spilled fragments, arrival order."""
+    """One partition back from its placed fragments, arrival order."""
     pieces = [store.get(rid) for rid in frag_ids]
     words = np.concatenate([p[0] for p in pieces]) if pieces else \
         np.zeros((0, 1), np.uint32)
@@ -146,7 +145,7 @@ def stream_sorted_words(
     chunks_fn: Callable[[], Iterator[tuple]],
     bits: int,
     budget: MemoryBudget,
-    store: RunStore,
+    store: PlacementStore,
     row_bytes: int,
     hi: Optional[int] = None,
     executor: Optional[PlanExecutor] = None,
@@ -161,12 +160,18 @@ def stream_sorted_words(
     tuple of equal-length arrays riding along.  Yields the same shape in
     global stable code order, every yielded chunk within the budget.
 
+    ``store`` is any :class:`~repro.stream.chunks.PlacementStore`: this
+    loop only ever distributes chunks into partition fragments, reads
+    fragments back, and asks the store to sort one partition — where
+    fragments live (disk runs, device shards) is the store's business.
+
     ``hi`` is the number of undetermined low code bits (every row already
     shares bits ``[hi, bits)`` — the recursion invariant; level 0 streams
     arrival order, which for fully-equal codes is the stable sorted
     order).  ``limit_rows`` stops after that many rows *and prunes ahead
     of the distribution pass*: partitions the histogram proves past the
-    limit are never spilled, let alone loaded — the top-k path.
+    limit are never placed, let alone loaded — the top-k path (on a
+    device store, pruned partitions' owner devices receive nothing).
     """
     hi = bits if hi is None else hi
     emitted = 0
@@ -210,12 +215,12 @@ def stream_sorted_words(
     budget_rows = budget.rows(row_bytes)
 
     if n_total <= budget_rows:
-        # the data fit after all: one in-memory sort, no spill
+        # the data fit after all: one in-memory sort, no placement pass
         pieces = list(chunks_fn())
         words = np.concatenate([p[0] for p in pieces])
         payloads = tuple(np.concatenate([p[1][i] for p in pieces])
                          for i in range(n_payloads))
-        words, payloads = _sort_in_memory(words, payloads, bits, budget)
+        words, payloads = store.sort_rows(words, payloads, bits, hi, budget)
         words, payloads = clip(words, payloads)
         if words.shape[0]:
             yield words, payloads
@@ -232,51 +237,78 @@ def stream_sorted_words(
         partitions = partitions[:keep]
     lut = bin_to_partition(tuple(partitions), 1 << w)
 
-    # distribution pass: route every row to its partition's fragment list
+    # distribution pass: the store places every row at its partition's
+    # fragments (disk spill / device all_to_all — same call)
     frag_ids: list = [[] for _ in partitions]
     for words, payloads in chunks_fn():
         budget.charge(words, *payloads)
         digit = _extract_field(words, bits, hi - w, w).astype(np.int64)
         pid = lut[digit]
-        order = np.argsort(pid, kind="stable")  # arrival kept within pid
-        pid_sorted = pid[order]
-        bounds = np.searchsorted(pid_sorted, np.arange(len(partitions) + 1))
-        for i in range(len(partitions)):
-            rows = order[bounds[i]:bounds[i + 1]]
-            if rows.shape[0]:
-                frag_ids[i].append(store.put(
-                    words[rows], *(p[rows] for p in payloads)))
-        # pid == -1 rows (pruned partitions) fall before bounds[0]: dropped
+        for i, ids in enumerate(
+                store.distribute(words, payloads, pid, len(partitions))):
+            frag_ids[i].extend(ids)
 
-    # sort-and-emit, partition (= key range) order
-    for part, frags in zip(partitions, frag_ids):
-        if room() == 0:
+    def sorted_partition(part, frags):
+        words, payloads = _load_fragments(store, frags, n_payloads, budget)
+        # the partition's bin range pins the top shared_field_bits of its
+        # field: only the code bits below stay undetermined, so the sort
+        # narrows to them (a single-bin partition drops the whole field)
+        sort_bits = hi - part.shared_field_bits(w)
+        return store.sort_rows(words, payloads, bits, sort_bits, budget)
+
+    # sort-and-emit, partition (= key range) order.  With workers > 1 a
+    # lookahead pool loads+sorts upcoming in-budget partitions while the
+    # current one streams out (sort/spill-I/O overlap); consumption stays
+    # strictly in partition order, so output is worker-count-invariant.
+    # The pool is skipped under limit_rows (speculative loads would touch
+    # partitions the prune proves dead) and on stores whose sorts are
+    # collective (concurrent shard_map dispatch from threads interleaves).
+    items = list(zip(partitions, frag_ids))
+    workers = _stream_workers()
+    pool: Optional[ThreadPoolExecutor] = None
+    pending: dict = {}
+    if workers > 1 and limit_rows is None and store.supports_concurrent_sorts:
+        pool = ThreadPoolExecutor(max_workers=workers)
+    try:
+        for idx, (part, frags) in enumerate(items):
+            if room() == 0:
+                for rid in frags:
+                    store.delete(rid)
+                continue
+            if not part.oversized(budget_rows):
+                if pool is not None:
+                    j = idx  # keep up to `workers` upcoming sorts in flight
+                    while len(pending) < workers and j < len(items):
+                        pj, fj = items[j]
+                        if j not in pending and not pj.oversized(budget_rows):
+                            pending[j] = pool.submit(sorted_partition, pj, fj)
+                        j += 1
+                    words, payloads = pending.pop(idx).result()
+                else:
+                    words, payloads = sorted_partition(part, frags)
+                words, payloads = clip(words, payloads)
+                if words.shape[0]:
+                    yield words, payloads
+                    emitted += int(words.shape[0])
+            else:
+                # skew fallback: a single bin outgrew the budget; its keys
+                # all share that bin's digit, so recurse on the next field
+                # down (sequential — recursion re-enters the store)
+                assert part.num_bins == 1, "only single bins can be oversized"
+                sub_fn = (lambda fr: lambda: (
+                    (a[0], tuple(a[1:])) for a in
+                    (store.get(rid) for rid in fr)))(frags)
+                for words, payloads in stream_sorted_words(
+                        sub_fn, bits, budget, store, row_bytes, hi=hi - w,
+                        executor=executor, partition_bits=partition_bits,
+                        limit_rows=room()):
+                    yield words, payloads
+                    emitted += int(words.shape[0])
             for rid in frags:
                 store.delete(rid)
-            continue
-        if not part.oversized(budget_rows):
-            words, payloads = _load_fragments(store, frags, n_payloads,
-                                              budget)
-            words, payloads = _sort_in_memory(words, payloads, bits, budget)
-            words, payloads = clip(words, payloads)
-            if words.shape[0]:
-                yield words, payloads
-                emitted += int(words.shape[0])
-        else:
-            # skew fallback: a single bin outgrew the budget; its keys all
-            # share that bin's digit, so recurse on the next field down
-            assert part.num_bins == 1, "only single bins can be oversized"
-            sub_fn = (lambda fr: lambda: (
-                (a[0], tuple(a[1:])) for a in
-                (store.get(rid) for rid in fr)))(frags)
-            for words, payloads in stream_sorted_words(
-                    sub_fn, bits, budget, store, row_bytes, hi=hi - w,
-                    executor=executor, partition_bits=partition_bits,
-                    limit_rows=room()):
-                yield words, payloads
-                emitted += int(words.shape[0])
-        for rid in frags:
-            store.delete(rid)
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True)
 
 
 def _key_chunks_fn(source: ChunkSource, with_rowids: bool):
@@ -307,7 +339,7 @@ def _key_chunks_fn(source: ChunkSource, with_rowids: bool):
 
 
 def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
-                  store: Optional[RunStore] = None,
+                  store: Optional[PlacementStore] = None,
                   executor: Optional[PlanExecutor] = None,
                   partition_bits: int = DEFAULT_PARTITION_BITS,
                   ) -> Iterator[np.ndarray]:
@@ -318,13 +350,16 @@ def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
     ``budget.rows(4)`` is the in-memory case) and must be re-iterable —
     the sort streams it twice.  Yields sorted key chunks (input dtype) in
     global order; peak resident key bytes stay under ``budget`` (tracked
-    — read ``budget.peak_bytes``).  ``store`` keeps spilled fragments
-    (own temp store by default, cleaned up when the generator finishes
-    or is closed).
+    — read ``budget.peak_bytes``).  ``store`` is the
+    :class:`~repro.stream.chunks.PlacementStore` holding partition
+    fragments — disk runs by default (an owned temp store, cleaned up
+    when the generator finishes or is closed), or a
+    :class:`~repro.stream.device_store.DeviceShardStore` to place
+    fragments on a jax mesh and sort each partition distributed.
     """
     assert 0 <= p <= 32, f"p={p} out of range (0..32)"
     own_store = store is None
-    store = store or RunStore()
+    store = temp_store() if store is None else store
     try:
         chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=False)
         for words, _ in stream_sorted_words(
@@ -338,19 +373,19 @@ def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
 
 
 def external_argsort(source: ChunkSource, p: int, budget: MemoryBudget,
-                     store: Optional[RunStore] = None,
+                     store: Optional[PlacementStore] = None,
                      executor: Optional[PlanExecutor] = None,
                      partition_bits: int = DEFAULT_PARTITION_BITS,
                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Like :func:`external_sort`, but each yielded chunk is ``(sorted
     keys, int64 global arrival indices)`` — the stable permutation, in
     budget-sized pieces.  Row ids are assigned by stream position, ride
-    the spill fragments, and equal keys keep arrival order end to end
-    (fragments spill in arrival order, the in-partition pass chain is
+    the placed fragments, and equal keys keep arrival order end to end
+    (fragments place in arrival order, the store's partition sort is
     stable, and fully-equal recursion levels stream arrival order)."""
     assert 0 <= p <= 32, f"p={p} out of range (0..32)"
     own_store = store is None
-    store = store or RunStore()
+    store = temp_store() if store is None else store
     try:
         chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=True)
         for words, (rowids,) in stream_sorted_words(

@@ -77,6 +77,17 @@ class KeyPartition:
         peel off."""
         return self.count > budget_rows
 
+    def shared_field_bits(self, w: int) -> int:
+        """Leading bits of the ``w``-bit partitioning field every key in
+        this partition provably shares: bins form the contiguous range
+        ``[lo, hi)``, so all member digits agree above the highest bit
+        where ``lo`` and ``hi - 1`` differ.  A single-bin partition shares
+        all ``w`` (its digit is fully determined).  The per-partition sort
+        only needs the bits *below* the shared prefix — the bin range
+        already implies the rest."""
+        assert 0 <= self.lo < self.hi <= (1 << w)
+        return w - (self.lo ^ (self.hi - 1)).bit_length()
+
 
 def streamed_field_counts(
     chunk_iter: Iterable[np.ndarray],

@@ -31,7 +31,13 @@ from typing import Callable, Iterator, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.query.table import Table
-from repro.stream.chunks import ChunkSource, MemoryBudget, RunStore
+from repro.stream.chunks import (
+    ChunkSource,
+    MemoryBudget,
+    PlacementStore,
+    RunStore,
+    temp_store,
+)
 from repro.stream.external import row_cost_bytes, stream_sorted_words
 
 __all__ = [
@@ -164,22 +170,30 @@ def _encoded_stream(st: StreamTable, by, codecs):
 
 def stream_order_by(st: StreamTable, by,
                     codecs=None,
-                    store: Optional[RunStore] = None) -> StreamTable:
+                    store: Optional[RunStore] = None,
+                    placement: Optional[PlacementStore] = None
+                    ) -> StreamTable:
     """Streaming multi-column ORDER BY (stable): returns a re-iterable
     StreamTable of sorted runs spilled to ``store`` (an owned temp store
     by default).  Peak residency stays within ``st.budget`` — the
     sorting itself runs partition by partition through the external
-    core."""
+    core.  ``placement`` holds the *working* partition fragments and runs
+    the partition sorts (disk by default; pass a
+    :class:`~repro.stream.device_store.DeviceShardStore` to place
+    fragments on a jax mesh and sort distributed — result runs are host
+    arrays either way)."""
     codec, names, chunks_fn, row_bytes = _encoded_stream(st, by, codecs)
-    work = RunStore()  # fragments; dropped as soon as each partition sorts
-    out_store = store or RunStore()
+    own_work = placement is None
+    work = temp_store() if placement is None else placement  # working fragments
+    out_store = RunStore() if store is None else store
     run_ids = []
     try:
         for _, payloads in stream_sorted_words(
                 chunks_fn, codec.bits, st.budget, work, row_bytes):
             run_ids.append(out_store.put(*payloads))
     finally:
-        work.close()
+        if own_work:
+            work.close()
     chunks = _run_tables_fn(out_store, run_ids, names)
     return StreamTable(chunks, st.budget,
                        store=out_store if store is None else None)
@@ -194,20 +208,23 @@ def _run_tables_fn(store: RunStore, run_ids, names) -> Callable:
 
 
 def stream_top_k(st: StreamTable, by, k: int, codecs=None,
-                 store: Optional[RunStore] = None) -> Table:
+                 store: Optional[PlacementStore] = None) -> Table:
     """First ``k`` rows of the streaming stable ORDER BY, as one
     in-memory Table (k rows are assumed to fit — that is what top-k is
-    for).  The partition histogram prunes ahead of the spill: partitions
-    that cannot reach rank k are never written to disk, never loaded.
-    ``store`` exposes the working spill store (tests count what was —
-    and wasn't — touched)."""
+    for).  The partition histogram prunes ahead of placement: partitions
+    that cannot reach rank k are never placed, never loaded.  ``store``
+    is the working :class:`~repro.stream.chunks.PlacementStore` (tests
+    count what was — and wasn't — touched; on a
+    :class:`~repro.stream.device_store.DeviceShardStore` the prune is a
+    *device* prune — pruned partitions' owner devices receive zero
+    fragments)."""
     if k <= 0:
         first = st._peek()
         assert first is not None, "cannot top_k an empty StreamTable"
         return first.head(0)
     codec, names, chunks_fn, row_bytes = _encoded_stream(st, by, codecs)
     own = store is None
-    work = store or RunStore()
+    work = temp_store() if store is None else store
     try:
         pieces = [Table(dict(zip(names, payloads)))
                   for _, payloads in stream_sorted_words(
@@ -229,7 +246,8 @@ _COMBINE = {"sum": np.add, "count": np.add,
 
 def stream_group_by(st: StreamTable, by,
                     aggs: Mapping[str, Tuple[Optional[str], str]],
-                    codecs=None) -> Table:
+                    codecs=None,
+                    placement: Optional[PlacementStore] = None) -> Table:
     """Streaming GROUP BY + aggregation: one in-memory ``group_by`` per
     sorted chunk, partials merged at chunk boundaries.
 
@@ -239,7 +257,9 @@ def stream_group_by(st: StreamTable, by,
     group of the running result with the first group of the next partial
     when their keys match — is exact for sum/count/min/max.  Output: one
     row per group, key-sorted (assumed to fit memory, as for the
-    in-memory operator).
+    in-memory operator).  ``placement`` holds the working partition
+    fragments (disk by default; a device store aggregates each
+    mesh-sorted partition).
     """
     from repro.query.operators import _normalize_by, group_by
 
@@ -247,7 +267,9 @@ def stream_group_by(st: StreamTable, by,
     codec, names, chunks_fn, row_bytes = _encoded_stream(st, by_norm, codecs)
     acc: Optional[dict] = None
     prev_last_code: Optional[np.ndarray] = None
-    with RunStore() as work:
+    own_work = placement is None
+    work = temp_store() if placement is None else placement
+    try:
         for words, payloads in stream_sorted_words(
                 chunks_fn, codec.bits, st.budget, work, row_bytes):
             part = group_by(Table(dict(zip(names, payloads))), by_norm,
@@ -263,6 +285,9 @@ def stream_group_by(st: StreamTable, by,
             acc = partial if acc is None else \
                 _merge_partials(acc, partial, boundary, aggs)
             prev_last_code = np.asarray(words[-1])
+    finally:
+        if own_work:
+            work.close()
     assert acc is not None, "cannot group an empty StreamTable"
     return Table(acc)
 

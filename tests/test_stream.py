@@ -370,9 +370,9 @@ class _CountingStore(RunStore):
         super().__init__()
         self.rows_put = 0
 
-    def put(self, *arrays):
+    def put(self, *arrays, partition=None):
         self.rows_put += int(arrays[0].shape[0])
-        return super().put(*arrays)
+        return super().put(*arrays, partition=partition)
 
 
 def test_stream_top_k_prunes_spill_and_never_loads_skipped_runs(rng):
@@ -425,3 +425,103 @@ def test_external_sort_caller_store_left_open(rng, tmp_path):
     assert np.array_equal(out, np.sort(keys))
     assert len(store) == 0, "fragments are dropped as partitions finish"
     store.close()
+
+
+# --- narrowed partition sorts ------------------------------------------------
+
+
+def test_shared_field_bits_pins_partition_prefix():
+    # single bin: digit fully determined, all w bits shared
+    assert KeyPartition(lo=5, hi=6, count=1).shared_field_bits(10) == 10
+    # [4, 8) = 0b0100..0b0111: top 8 of 10 bits agree
+    assert KeyPartition(lo=4, hi=8, count=1).shared_field_bits(10) == 8
+    # the full range shares nothing
+    assert KeyPartition(lo=0, hi=1 << 10, count=1).shared_field_bits(10) == 0
+    # [0, 3) holds digits {0,1,2}: bit 1 differs, bits above it agree
+    assert KeyPartition(lo=0, hi=3, count=1).shared_field_bits(10) == 8
+
+
+@pytest.mark.parametrize("bits,low_bits", [(32, 22), (32, 5), (48, 17),
+                                           (48, 40), (20, 20), (20, 0)])
+def test_sort_rowids_narrowed_matches_oracle(rng, bits, low_bits):
+    """A narrowed sort (shared high bits implied) must equal the full
+    stable sort whenever the shared bits really are constant — the
+    external sort's per-partition invariant, checked against numpy."""
+    from repro.query.codec import word_widths
+    from repro.query.operators import sort_rowids
+
+    n = 4096
+    widths = word_widths(bits)
+    # every row shares bits [low_bits, bits); low bits are adversarial
+    shared = int(rng.integers(0, 1 << min(bits - low_bits, 30))) if \
+        bits > low_bits else 0
+    vals = (np.full(n, shared, np.uint64) << np.uint64(low_bits)) | \
+        rng.integers(0, max(1 << min(low_bits, 60), 1), n, dtype=np.uint64)
+    # pack into MSB-first (n, W) words
+    words = np.zeros((n, len(widths)), np.uint32)
+    off = bits
+    for j, wj in enumerate(widths):
+        off -= wj
+        words[:, j] = ((vals >> np.uint64(off)) &
+                       np.uint64((1 << wj) - 1)).astype(np.uint32)
+    sw, rowids = sort_rowids(jnp.asarray(words), bits, low_bits=low_bits)
+    expect = np.argsort(vals, kind="stable")
+    assert np.array_equal(np.asarray(rowids), expect)
+    assert np.array_equal(np.asarray(sw), words[expect])
+
+
+def test_sort_rowids_fully_shared_returns_arrival_order(rng):
+    from repro.query.operators import sort_rowids
+
+    words = rng.integers(0, 1 << 32, (100, 1), dtype=np.uint64) \
+        .astype(np.uint32)
+    sw, rowids = sort_rowids(jnp.asarray(words), 32, low_bits=0)
+    assert np.array_equal(np.asarray(rowids), np.arange(100))
+    assert np.array_equal(np.asarray(sw), words)
+
+
+def test_external_sort_narrowing_matches_oracle_tight_partitions(rng):
+    """Small budget → many partitions → deep narrowing; the narrowed
+    per-partition sorts must still reproduce the oracle exactly."""
+    keys = _dist_keys(rng, "zipf", 60000, 32)
+    budget = MemoryBudget(8 * 1024)
+    out = _collect_sort(keys, 32, budget)
+    assert np.array_equal(out, np.sort(keys))
+
+
+# --- overlapped sort + spill I/O (REPRO_STREAM_WORKERS) ----------------------
+
+
+@pytest.mark.parametrize("dist", ["uniform", "onehot_bin", "all_equal"])
+def test_external_argsort_worker_count_invariant(rng, dist, monkeypatch):
+    """Output is bit-identical at 1 vs N workers — the lookahead pool
+    only overlaps load+sort, never reorders emission."""
+    keys = _dist_keys(rng, dist, 50000, 32)
+    budget = MemoryBudget(16 * 1024)
+
+    def run():
+        src = ArraySource(keys, budget.rows(12))
+        parts = list(external_argsort(src, 32, budget))
+        return (np.concatenate([p[0] for p in parts]),
+                np.concatenate([p[1] for p in parts]))
+
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "1")
+    k1, r1 = run()
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "3")
+    k3, r3 = run()
+    assert np.array_equal(k1, k3)
+    assert np.array_equal(r1, r3)
+    assert np.array_equal(r1, np.argsort(keys, kind="stable"))
+
+
+def test_stream_workers_env_parsing(monkeypatch):
+    from repro.stream.external import _stream_workers
+
+    monkeypatch.delenv("REPRO_STREAM_WORKERS", raising=False)
+    assert _stream_workers() == 1
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "4")
+    assert _stream_workers() == 4
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "0")
+    assert _stream_workers() == 1
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "not-a-number")
+    assert _stream_workers() == 1
