@@ -36,7 +36,7 @@ import time
 # the distributed mode claims its flags at import time (JAX_PLATFORMS
 # keeps the child off any accelerator plugin the image ships).
 DIST_SMOKE_DEVICES = 4
-if __name__ == "__main__" and "distributed-smoke" in sys.argv[1:2]:
+if __name__ == "__main__" and "distributed-smoke" in sys.argv[1:]:
     os.environ.setdefault(
         "XLA_FLAGS",
         f"--xla_force_host_platform_device_count={DIST_SMOKE_DEVICES}")
@@ -47,10 +47,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
+from repro.core import dispatch
 from repro.stream import ArraySource, MemoryBudget, external_sort
 from repro.stream.external import row_cost_bytes
 
-STREAM_JSON_SCHEMA = 1
+# Record schema history:
+#   1 — {points: [{n, p, budget_bytes, wall_s, ...}]} + provenance
+#   2 — points carry smoke_guard (the >2x relative wall gate's baseline
+#       flag) and the dispatch accounting (chain executions + compiled
+#       programs per external sort, counted via repro.core.dispatch)
+STREAM_JSON_SCHEMA = 2
 
 #: chunk sizing uses the subsystem's own single-word row-cost model, so
 #: the benchmark's budget ratio tracks external_sort's actual math
@@ -113,6 +119,23 @@ SMOKE_BUDGET_S = 150.0
 _SMOKE_N = 1 << 18
 _SMOKE_BUDGET_BYTES = _SMOKE_N * 4 // 8  # dataset = exactly 8x the budget
 
+#: Relative gate vs the committed BENCH_stream.json smoke wall (same
+#: pattern as the distributed gate below).
+STREAM_SMOKE_REGRESSION_FACTOR = 2.0
+STREAM_SMOKE_REGRESSION_FLOOR_S = 1.0
+
+#: Ceiling on compiled jitted programs one smoke external sort may cost
+#: across the repo's counted sites (chunk histograms + partition sort
+#: chains).  The bucket quantization + shared pow2 padding keep the real
+#: number at ~5; a retrace-per-partition regression lands in the
+#: hundreds, so 16 is a loose structural bound, not a tuning knob.
+SMOKE_MAX_COMPILES = 16
+
+#: The dispatch tags the streaming sort executes (histogram pass +
+#: serial and batched partition-sort chains).
+_STREAM_TAGS = ("stream.chunk_counts", "query.chain",
+                "query.segmented_chain")
+
 
 def _provenance() -> dict:
     from benchmarks.run import _provenance as prov
@@ -120,14 +143,65 @@ def _provenance() -> dict:
     return prov()
 
 
-def smoke(path: str = "BENCH_stream.json") -> dict:
+def _dispatch_accounting(seen: dict) -> dict:
+    """Chain executions + compiled programs from a dispatch.track dict."""
+    return {
+        "chain_executions": sum(
+            seen.get(t, 0) for t in ("query.chain",
+                                     "query.segmented_chain")),
+        "chunk_count_executions": seen.get("stream.chunk_counts", 0),
+        "compiled_programs": sum(
+            seen.get(t + ":compiles", 0) for t in _STREAM_TAGS),
+    }
+
+
+def _assert_clean_baseline(path: str) -> None:
+    """A committed baseline with dirty provenance fails the gate setup:
+    its numbers came from code no commit contains."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return
+    if any(pt.get("smoke_guard") for pt in rec.get("points", [])) and \
+            rec.get("provenance", {}).get("git_dirty"):
+        raise SystemExit(
+            f"committed {path} carries git_dirty provenance: regenerate "
+            "it from a clean tree before gating against it")
+
+
+def smoke(path: str = "BENCH_stream.json",
+          allow_dirty: bool = False) -> dict:
     """One ≥ 8×-budget external sort under a hard wall: asserts
-    bit-exactness and the resident-bytes budget in-process, then records
-    the point (provenance-stamped) to ``BENCH_stream.json``."""
-    pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
+    bit-exactness, the resident-bytes budget, and the dispatch-count
+    invariant (O(1) compiled programs per external sort — the shared
+    bucket/batched dispatch win) in-process, then records the point
+    (provenance-stamped) to ``BENCH_stream.json`` and gates >2x against
+    the committed wall."""
+    from benchmarks.run import guard_overwrite
+
+    _assert_clean_baseline(path)
+    baseline = _baseline_wall(path)
+    with dispatch.track() as seen:
+        pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
+    pt["smoke_guard"] = True
+    pt.update(_dispatch_accounting(seen))
     row(f"stream/smoke/n{pt['n']}/b{pt['budget_bytes']}", pt["wall_s"],
         f"budget_s={SMOKE_BUDGET_S} ratio={pt['ratio_to_budget']:.0f}x "
-        f"peak={pt['peak_resident_bytes']}B")
+        f"peak={pt['peak_resident_bytes']}B "
+        f"compiles={pt['compiled_programs']} "
+        f"chains={pt['chain_executions']}")
+    if pt["compiled_programs"] > SMOKE_MAX_COMPILES:
+        raise SystemExit(
+            f"smoke external sort compiled {pt['compiled_programs']} "
+            f"jitted programs > {SMOKE_MAX_COMPILES}: the shared-bucket "
+            "dispatch path regressed to per-partition retracing")
+    if pt["chain_executions"] > pt["chunks"]:
+        raise SystemExit(
+            f"{pt['chain_executions']} partition-sort dispatches for "
+            f"{pt['chunks']} emitted chunks: the one-dispatch-per-"
+            "partition-or-batch invariant regressed")
+    guard_overwrite(path, allow_dirty)
     record = {
         "schema": STREAM_JSON_SCHEMA,
         "provenance": _provenance(),
@@ -140,6 +214,15 @@ def smoke(path: str = "BENCH_stream.json") -> dict:
         raise SystemExit(
             f"stream smoke point took {pt['wall_s']:.1f}s > "
             f"{SMOKE_BUDGET_S}s budget: a streaming-path regression landed")
+    if baseline is not None:
+        limit = max(STREAM_SMOKE_REGRESSION_FACTOR * baseline,
+                    STREAM_SMOKE_REGRESSION_FLOOR_S)
+        row(f"stream/smoke-guard/n{pt['n']}", pt["wall_s"],
+            f"baseline_s={baseline:.3f} limit_s={limit:.3f}")
+        if pt["wall_s"] > limit:
+            raise SystemExit(
+                f"stream smoke regressed: {pt['wall_s']:.3f}s vs "
+                f"{baseline:.3f}s committed (limit {limit:.3f}s)")
     return record
 
 
@@ -167,7 +250,8 @@ def _baseline_wall(path: str):
     return pts[0]["wall_s"] if pts else None
 
 
-def distributed_smoke(path: str = "BENCH_distributed.json") -> dict:
+def distributed_smoke(path: str = "BENCH_distributed.json",
+                      allow_dirty: bool = False) -> dict:
     """The 8×-budget external sort with partition fragments ON THE MESH:
     4 simulated host devices, fragments placed by bucket ``all_to_all``,
     partition sorts through the DistributedBackend pairs path.  Asserts
@@ -175,8 +259,10 @@ def distributed_smoke(path: str = "BENCH_distributed.json") -> dict:
     wall plus a >2× relative gate against the committed baseline, and
     records the point (provenance-stamped) to ``BENCH_distributed.json``.
     """
+    from benchmarks.run import guard_overwrite
     from repro.stream import DeviceShardStore
 
+    _assert_clean_baseline(path)
     n_dev = len(jax.devices())
     assert n_dev == DIST_SMOKE_DEVICES, (
         f"distributed smoke needs {DIST_SMOKE_DEVICES} simulated devices, "
@@ -226,6 +312,7 @@ def distributed_smoke(path: str = "BENCH_distributed.json") -> dict:
         f"devices={devices_used}")
 
     baseline = _baseline_wall(path)
+    guard_overwrite(path, allow_dirty)
     record = {
         "schema": DISTRIBUTED_JSON_SCHEMA,
         "provenance": _provenance(),
@@ -252,10 +339,14 @@ def distributed_smoke(path: str = "BENCH_distributed.json") -> dict:
 
 
 if __name__ == "__main__":
-    mode = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks.run import allow_dirty_flag
+
+    _allow_dirty = allow_dirty_flag(sys.argv)
+    _argv = [a for a in sys.argv[1:] if a != "--allow-dirty"]
+    mode = _argv[0] if _argv else None
     if mode == "smoke":
-        smoke()
+        smoke(allow_dirty=_allow_dirty)
     elif mode == "distributed-smoke":
-        distributed_smoke()
+        distributed_smoke(allow_dirty=_allow_dirty)
     else:
         run()

@@ -50,7 +50,10 @@ SORT_JSON_POINTS = (
 #   3 — points carry max_bins_log2/engine/smoke_guard (per-engine
 #       trajectory + CI guard baselines); default points record the
 #       resolved engine hints
-SORT_JSON_SCHEMA = 3
+#   4 — query points carry the measured oracle-gap ratio + fused-chain
+#       dispatch counts; the order_by point is a smoke_guard baseline for
+#       the bench_query smoke's >2x relative ratio gate
+SORT_JSON_SCHEMA = 4
 
 
 def _provenance() -> dict:
@@ -76,7 +79,36 @@ def _provenance() -> dict:
     }
 
 
-def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
+def guard_overwrite(path: str, allow_dirty: bool = False) -> None:
+    """Refuse to overwrite a *committed* ``BENCH_*.json`` from a dirty
+    tree: a perf record whose provenance says ``git_dirty: true`` is
+    unattributable — the numbers came from code no commit contains — and
+    it silently poisons every relative regression gate keyed on it.
+    ``allow_dirty`` (the ``--allow-dirty`` CLI flag) is the explicit
+    local-iteration escape; untracked target paths are always fine."""
+    if allow_dirty or not _provenance()["git_dirty"]:
+        return
+    try:
+        tracked = subprocess.run(
+            ["git", "ls-files", "--error-unmatch", path],
+            capture_output=True, timeout=10).returncode == 0
+    except (OSError, subprocess.SubprocessError):
+        tracked = False
+    if tracked:
+        raise SystemExit(
+            f"refusing to overwrite committed {path} from a dirty tree: "
+            "the record would carry git_dirty provenance and corrupt the "
+            "cross-PR baselines — commit first, or pass --allow-dirty "
+            "for local iteration")
+
+
+def allow_dirty_flag(argv) -> bool:
+    """Shared ``--allow-dirty`` CLI parse for every bench writer."""
+    return "--allow-dirty" in argv
+
+
+def emit_sort_json(path: str = "BENCH_sort.json",
+                   allow_dirty: bool = False) -> dict:
     """Time :func:`fractal_sort` at the standard points (plus the query
     operators) and write the machine-readable perf record (wall time +
     the analytic traffic model behind the paper's b_eff figure)."""
@@ -88,6 +120,7 @@ def emit_sort_json(path: str = "BENCH_sort.json") -> dict:
     from repro.core import fractal_sort, fractal_sort_stats, make_sort_plan
     from repro.core.autotune import tuned_plan
 
+    guard_overwrite(path, allow_dirty)
     rng = np.random.default_rng(0)
     results = []
     for n, p, w, engine, guard in SORT_JSON_POINTS:
@@ -138,9 +171,11 @@ def main() -> None:
                             bench_sortplan, bench_stream, bench_throughput,
                             roofline)
 
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    allow_dirty = allow_dirty_flag(sys.argv)
+    argv = [a for a in sys.argv[1:] if a != "--allow-dirty"]
+    only = argv[0] if argv else None
     if only == "sort_json":
-        emit_sort_json()
+        emit_sort_json(allow_dirty=allow_dirty)
         return
     mods = {
         "latency": bench_latency, "memory": bench_memory,
@@ -155,7 +190,7 @@ def main() -> None:
         if only and only != name:
             continue
         mod.run()
-    emit_sort_json()
+    emit_sort_json(allow_dirty=allow_dirty)
 
 
 if __name__ == '__main__':

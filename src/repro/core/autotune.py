@@ -49,6 +49,7 @@ __all__ = [
     "autotune_plan",
     "candidate_grid",
     "cache_key",
+    "consult_count",
     "default_cache_path",
     "tuned_plan",
 ]
@@ -75,6 +76,18 @@ _ONEHOT_WIDTH_CAP = 8
 # (path, key) — the disk is read at most once per path per process.
 _FILE_CACHE: dict = {}
 _MEM_CACHE: dict = {}
+
+# Monotone count of cache consultations (every autotune_plan call with
+# p > 0).  Resolution is cheap but not free — a dict probe, maybe a file
+# read — and hot loops must not pay it per item: the external sort
+# resolves one plan per (p, length-bucket) per call, NOT per partition.
+# Tests read this counter to pin that O(buckets) invariant.
+_CONSULTS = 0
+
+
+def consult_count() -> int:
+    """Autotune cache consultations since process start (monotone)."""
+    return _CONSULTS
 
 
 def default_cache_path() -> str:
@@ -199,6 +212,8 @@ def autotune_plan(n: int, p: int, backend: str = "jnp",
         # cache (the external sort reaches this through recursive
         # partitioning that has consumed every key bit).
         return make_sort_plan(n, 0)
+    global _CONSULTS
+    _CONSULTS += 1
     path = cache_path or default_cache_path()
     bucket = shape_bucket(n)
     key = cache_key(backend, p, l_n, bucket)

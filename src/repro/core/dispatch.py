@@ -1,0 +1,93 @@
+"""Dispatch accounting: how many jitted programs a code path ran.
+
+The perf story of both query regimes is a *dispatch-count* story — the
+fused ``order_by`` chain is one jitted program where the eager path was
+dozens of elementwise dispatches, and the external sort's partition loop
+shares a handful of compiled programs across every partition where it
+used to trace one per (length, sort-bits) configuration.  Wall-clock
+guards can't see a dispatch regression until it is large; this module
+counts executions and compiles *at the repo's own jit call sites*, so
+benchmarks and tests assert the structural invariant directly
+("one chain execution per query", "O(1) compiled programs per external
+sort") instead of inferring it from noisy timings.
+
+Counting is always on: one ``Counter`` update per jitted-program call is
+noise next to the dispatch itself.  jax internals are never hooked —
+:func:`wrap` decorates a jitted callable where the repo creates it, and
+compile detection reads the jit object's own cache size (a new cache
+entry ⇔ this call traced/compiled), falling back to execution-only
+counting if that private surface moves.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from collections import Counter
+from typing import Callable, Dict
+
+__all__ = ["counts", "record", "snapshot_delta", "track", "wrap"]
+
+_counts: Counter = Counter()
+_lock = threading.Lock()
+
+
+def record(tag: str, compiled: bool = False) -> None:
+    """Count one jitted-program execution under ``tag`` (and one compile,
+    when this call also traced)."""
+    with _lock:
+        _counts[tag] += 1
+        if compiled:
+            _counts[tag + ":compiles"] += 1
+
+
+def counts() -> Dict[str, int]:
+    """All counters since process start (tag → executions; ``:compiles``
+    suffixed tags count trace/compile events at the same site)."""
+    with _lock:
+        return dict(_counts)
+
+
+def snapshot_delta(before: Dict[str, int]) -> Dict[str, int]:
+    """Counters accumulated since ``before`` (a :func:`counts` snapshot),
+    zero entries dropped."""
+    now = counts()
+    return {k: v - before.get(k, 0) for k, v in now.items()
+            if v - before.get(k, 0)}
+
+
+@contextlib.contextmanager
+def track():
+    """Scoped counting: ``with track() as seen: ...`` — after the block,
+    ``seen`` holds only the counters the block accumulated."""
+    before = counts()
+    seen: Dict[str, int] = {}
+    try:
+        yield seen
+    finally:
+        seen.update(snapshot_delta(before))
+
+
+def _cache_size(fn) -> int:
+    """The jit object's compiled-trace count, or -1 when unavailable (the
+    private surface moved: compile counting degrades, execution counting
+    stays exact)."""
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return -1
+
+
+def wrap(tag: str, fn: Callable) -> Callable:
+    """Count every call of a jitted callable under ``tag``; a call that
+    grows the jit cache (first call per input shape/dtype) also counts as
+    a compile."""
+
+    def wrapped(*args, **kwargs):
+        before = _cache_size(fn)
+        out = fn(*args, **kwargs)
+        record(tag, compiled=before >= 0 and _cache_size(fn) > before)
+        return out
+
+    wrapped.__wrapped__ = fn
+    return wrapped

@@ -78,6 +78,22 @@ def _digit_of(u: jnp.ndarray, dp: DigitPass) -> jnp.ndarray:
     return ((u >> dp.shift) & (dp.n_bins - 1)).astype(jnp.int32)
 
 
+def _as_key_stream(keys, encode) -> jnp.ndarray:
+    """The uint32 key stream a run ranks on: ``keys`` directly, or —
+    with an ``encode`` hook — the traceable order-preserving transform of
+    a *raw* input (a codec ``encode_fn`` word column).  Inside a jitted
+    run XLA fuses the elementwise encode into pass 0's digit extraction,
+    so the first histogram/rank reads raw-encoded digits with no
+    materialized code array between — the paper's fused key-based
+    histogram-update shape.  Every backend picks the hook up for free:
+    the encoded stream is what reaches ``rank``/``histogram``
+    (the Pallas ``fractal_rank``/``fractal_histogram`` kernels included).
+    """
+    if encode is None:
+        return keys.astype(jnp.uint32)
+    return encode(keys).astype(jnp.uint32)
+
+
 class PassBackend:
     """Per-pass primitives a :class:`PlanExecutor` composes into a sort.
 
@@ -300,14 +316,21 @@ class PlanExecutor:
 
     # -- plain sort ---------------------------------------------------------
 
-    def run(self, keys: jnp.ndarray, plan: SortPlan) -> jnp.ndarray:
+    def run(self, keys: jnp.ndarray, plan: SortPlan,
+            encode=None) -> jnp.ndarray:
         """Sorted keys.  Backends with ``reconstructs`` return the
         Algorithm-5 output dtype (int32/uint32 by ``plan.p``); others
-        return the uint32 key stream — callers cast as needed."""
+        return the uint32 key stream — callers cast as needed.
+
+        ``encode`` (here and on every ``run*`` mode) is the fused-encode
+        hook: a traceable order-preserving transform applied to ``keys``
+        *inside* the run (:func:`_as_key_stream`), so raw columns enter
+        and pass 0 extracts digits straight off the encoded stream."""
         self.backend.begin_run()
-        if keys.shape[0] == 0 or not plan.passes:
-            return keys  # empty input, or the p=0 identity plan
-        u = keys.astype(jnp.uint32)
+        u = _as_key_stream(keys, encode)
+        if u.shape[0] == 0 or not plan.passes:
+            # empty input, or the p=0 identity plan
+            return u if encode is not None else keys
         for dp in plan.passes[:-1]:
             u = self.backend.lsd_pass(u, dp)
         last = plan.passes[-1]
@@ -329,7 +352,8 @@ class PlanExecutor:
 
     # -- key–value (pairs) sort ---------------------------------------------
 
-    def run_pairs(self, keys: jnp.ndarray, values, plan: SortPlan):
+    def run_pairs(self, keys: jnp.ndarray, values, plan: SortPlan,
+                  encode=None):
         """Sort key–payload pairs by key: every LSD pass carries the
         payload alongside the keys, and the final fractal MSD pass scatters
         the payload next to the compressed trailing-bit entries — the
@@ -345,9 +369,10 @@ class PlanExecutor:
         single = not isinstance(values, tuple)
         payloads = (values,) if single else tuple(values)
         self.backend.begin_run()
-        if keys.shape[0] == 0 or not plan.passes:
-            return keys, values  # empty input, or the p=0 identity plan
-        u = keys.astype(jnp.uint32)
+        u = _as_key_stream(keys, encode)
+        if u.shape[0] == 0 or not plan.passes:
+            # empty input, or the p=0 identity plan
+            return (u if encode is not None else keys), values
         for dp in plan.passes[:-1]:
             u, *payloads = self.backend.lsd_pass_pairs(u, tuple(payloads),
                                                        dp)
@@ -371,18 +396,67 @@ class PlanExecutor:
 
     # -- argsort ------------------------------------------------------------
 
-    def run_argsort(self, keys: jnp.ndarray, plan: SortPlan) -> jnp.ndarray:
+    def run_argsort(self, keys: jnp.ndarray, plan: SortPlan,
+                    encode=None) -> jnp.ndarray:
         """Stable permutation with ``keys[perm]`` sorted: every pass is a
         payload-carrying LSD pass (the permutation is the payload, so
         there is nothing to reconstruct from bin positions)."""
         self.backend.begin_run()
-        n = keys.shape[0]
+        u = _as_key_stream(keys, encode)
+        n = u.shape[0]
         idx = jnp.arange(n, dtype=jnp.int32)
         if n == 0 or not plan.passes:
             return idx  # p=0: all keys equal, stable perm is the identity
-        u = keys.astype(jnp.uint32)
         for dp in plan.passes:
             u, idx = self.backend.lsd_pass_pairs(u, (idx,), dp)
+        return idx
+
+    # -- segmented argsort (batched equal-length sorts) ----------------------
+
+    def run_segmented_argsort(self, keys: jnp.ndarray, plan: SortPlan,
+                              seg_len_log2: int,
+                              encode=None) -> jnp.ndarray:
+        """Stable argsort *within* equal-length power-of-two segments.
+
+        ``keys`` is ``B`` independent arrays of length ``2**seg_len_log2``
+        laid end to end; the returned permutation sorts each segment in
+        place (``keys[perm]`` is sorted within every segment, and
+        ``perm[b*L:(b+1)*L]`` stays inside ``[b*L, (b+1)*L)``).  This is
+        the batched partition-sort mode: B padded partitions rank through
+        ONE jitted program instead of B chain dispatches, reusing the
+        grouped-trailing within-segment re-rank (a pass's global rank
+        gives the arrival among equal digits; a ``(B, n_bins)``
+        scatter-add table converts that to the within-segment rank).
+        Segment membership is *positional* (``slot >> seg_len_log2``), so
+        — unlike :meth:`run_grouped_trailing`, whose segments come from
+        bin counts — the map is trivially scatter-invariant: ranks never
+        cross segments.
+        """
+        self.backend.begin_run()
+        u = _as_key_stream(keys, encode)
+        n = u.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        if n == 0 or not plan.passes:
+            return idx  # empty batch, or p=0: identity within each segment
+        nseg = n >> seg_len_log2
+        seg = (idx >> seg_len_log2).astype(jnp.int32)
+        seg_start = (seg << seg_len_log2).astype(jnp.int32)
+        for dp in plan.passes:
+            digit = _digit_of(u, dp)
+            # zero bin_start: rank IS the arrival among equal digits in
+            # array (= segment-major) order, same trick as grouped mode.
+            arr_g, _, _ = self.backend.rank(
+                digit, dp.n_bins,
+                batch_hint=dp.rank_batch(self.backend.rank_base),
+                bin_start=jnp.zeros((dp.n_bins,), jnp.int32),
+                engine=dp.engine)
+            table = jnp.zeros((nseg, dp.n_bins), jnp.int32).at[
+                seg, digit].add(1)
+            before_seg = jnp.cumsum(table, axis=0) - table  # earlier segments
+            lower = jnp.cumsum(table, axis=1) - table       # smaller digits
+            rank = (seg_start + lower[seg, digit]
+                    + arr_g - before_seg[seg, digit])
+            u, idx = self.backend.scatter(rank, u, idx)
         return idx
 
     # -- per-chunk histogram accumulation (streaming consumers) --------------

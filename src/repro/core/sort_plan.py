@@ -56,6 +56,7 @@ __all__ = [
     "pass_cost",
     "pick_engine",
     "plan_cost",
+    "quantize_sort_bits",
     "rank_chunk_len",
     "scatter_tile_len",
 ]
@@ -85,6 +86,23 @@ _RANK_TILE_BUDGET = 1 << 21
 # the key stream and the executor falls back to a full re-plan.
 _GROUPED_TABLE_MARGIN_LOG2 = 4
 _GROUPED_TABLE_LOG2_CAP = 20
+
+
+def quantize_sort_bits(eff: int, width: int, step: int = 8) -> int:
+    """Round a partition's effective sort width up to a multiple of
+    ``step`` bits, capped at the stored word width.
+
+    Safe because the rounded-up bits are part of the partition's *shared*
+    prefix — equal on every row — so ranking on them reorders nothing.
+    The point is trace sharing: partitions whose exact effective widths
+    differ (21, 19, 23 bits...) collapse onto one quantized width (24),
+    so the per-(length, bits) jitted sort program compiles once and every
+    partition in the bucket reuses it — compile cost, not dispatch cost,
+    dominates the external sort's per-partition loop on a cold cache.
+    """
+    if eff <= 0:
+        return 0
+    return min(-(-eff // step) * step, width)
 
 
 def rank_chunk_len(n_bins: int, base: int = 1024) -> int:

@@ -40,6 +40,7 @@ disabled; the code *words* are uint32 and sort like any other key).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -56,6 +57,7 @@ __all__ = [
     "CompositeCodec",
     "ColumnSpec",
     "infer_codec",
+    "jit_encode",
     "word_widths",
 ]
 
@@ -78,6 +80,25 @@ class Codec:
 
     ``bits`` is the exact code width; ``encode`` returns ``(n, W)`` uint32
     words (``W = len(word_widths(bits))``), ``decode`` inverts it.
+
+    Encoding is split into two halves so the sort can fuse it:
+
+    * :meth:`prepare` — the host boundary: bitcast/layout-only, **never**
+      order-transforming (float64 → two uint32 words via a numpy view is
+      the whole reason this half exists — the repo runs JAX x64-off, so
+      the 64-bit bit pattern must be split before it can enter a trace).
+      Returns a pytree of ≤32-bit arrays.
+    * :meth:`encode_fn` — a **pure, jit-traceable** function from the
+      prepared pytree to the ``(n, W)`` uint32 code words.  Every
+      order-preserving transform (bias flip, sign-magnitude, bit packing,
+      descending inversion) lives here, so a caller can trace it straight
+      into the first digit pass of a sort — the paper's fused
+      histogram-update shape, with no host-side code matrix ever
+      materialized.
+
+    ``encode`` is always ``encode_fn(prepare(col))``; codecs are hashable
+    values (frozen dataclasses; :class:`CompositeCodec` hashes by its
+    specs), so jitted programs closed over a codec cache correctly.
     """
 
     bits: int
@@ -99,19 +120,43 @@ class Codec:
         return tuple(tuned_plan(n, w, backend=backend)
                      for w in word_widths(self.bits))
 
-    def encode(self, col) -> jnp.ndarray:
+    def prepare(self, col):
+        """Host boundary: the column as trace-ready arrays (bitcast /
+        layout only — no ordering transform happens here)."""
+        return jnp.asarray(col)
+
+    def encode_fn(self, prepped) -> jnp.ndarray:
+        """Traceable order-preserving transform: prepared pytree →
+        ``(n, W)`` uint32 code words."""
         raise NotImplementedError
+
+    def encode(self, col) -> jnp.ndarray:
+        return self.encode_fn(self.prepare(col))
 
     def decode(self, words: jnp.ndarray):
         raise NotImplementedError
+
+
+@functools.lru_cache(maxsize=128)
+def _encode_program(codec: "Codec"):
+    """One jitted ``encode_fn`` per codec value (jax's jit cache then
+    specializes per input shape) — the streaming table path encodes many
+    chunks through the same codec and must not pay eager per-op dispatch
+    each time."""
+    return jax.jit(codec.encode_fn)
+
+
+def jit_encode(codec: "Codec", col) -> jnp.ndarray:
+    """``codec.encode(col)`` as one cached jitted dispatch."""
+    return _encode_program(codec)(codec.prepare(col))
 
 
 @dataclasses.dataclass(frozen=True)
 class BoolCodec(Codec):
     bits: int = 1
 
-    def encode(self, col):
-        return jnp.asarray(col).astype(bool).astype(jnp.uint32)[:, None]
+    def encode_fn(self, prepped):
+        return jnp.asarray(prepped).astype(bool).astype(jnp.uint32)[:, None]
 
     def decode(self, words):
         return words[:, 0] != 0
@@ -138,8 +183,8 @@ class IntCodec(Codec):
     def __post_init__(self):
         assert 2 <= self.bits <= 32, f"IntCodec bits={self.bits}"
 
-    def encode(self, col):
-        u = jnp.asarray(col).astype(jnp.int32).astype(jnp.uint32)
+    def encode_fn(self, prepped):
+        u = jnp.asarray(prepped).astype(jnp.int32).astype(jnp.uint32)
         bias = jnp.uint32((1 << (self.bits - 1)) & 0xFFFFFFFF)
         return ((u + bias) & _mask(self.bits))[:, None]
 
@@ -161,8 +206,9 @@ class UIntCodec(Codec):
     def __post_init__(self):
         assert 1 <= self.bits <= 32, f"UIntCodec bits={self.bits}"
 
-    def encode(self, col):
-        return (jnp.asarray(col).astype(jnp.uint32) & _mask(self.bits))[:, None]
+    def encode_fn(self, prepped):
+        return (jnp.asarray(prepped).astype(jnp.uint32)
+                & _mask(self.bits))[:, None]
 
     def decode(self, words):
         code = words[:, 0]
@@ -175,8 +221,8 @@ class UIntCodec(Codec):
 class Float32Codec(Codec):
     bits: int = 32
 
-    def encode(self, col):
-        x = jnp.asarray(col).astype(jnp.float32)
+    def encode_fn(self, prepped):
+        x = jnp.asarray(prepped).astype(jnp.float32)
         u = jax.lax.bitcast_convert_type(x, jnp.uint32)
         code = jnp.where(u >> 31 != 0, ~u, u | jnp.uint32(0x80000000))
         return code[:, None]
@@ -190,18 +236,30 @@ class Float32Codec(Codec):
 @dataclasses.dataclass(frozen=True)
 class Float64Codec(Codec):
     """Two-word code; the numpy boundary keeps full float64 precision
-    while the emitted words stay uint32 (the repo runs JAX x64-off)."""
+    while the emitted words stay uint32 (the repo runs JAX x64-off).
+
+    ``prepare`` is a pure bitcast — the uint64 view split into (hi, lo)
+    uint32 halves on the host, because x64-off jax cannot hold the 64-bit
+    pattern — and the sign-magnitude transform runs per half in
+    :meth:`encode_fn`: the sign lives in the hi word's top bit, so
+    negative values complement both halves and non-negative values set
+    only the hi half's sign bit."""
 
     bits: int = 64
 
-    def encode(self, col):
-        x = np.asarray(col, np.float64)
-        u = x.view(np.uint64)
-        code = np.where(u >> np.uint64(63) != 0, ~u,
-                        u | np.uint64(1 << 63))
-        words = np.stack([(code >> np.uint64(32)).astype(np.uint32),
-                          code.astype(np.uint32)], axis=1)
-        return jnp.asarray(words)
+    def prepare(self, col):
+        u = np.asarray(col, np.float64).view(np.uint64)
+        return (jnp.asarray((u >> np.uint64(32)).astype(np.uint32)),
+                jnp.asarray(u.astype(np.uint32)))
+
+    def encode_fn(self, prepped):
+        hi, lo = prepped
+        hi = jnp.asarray(hi).astype(jnp.uint32)
+        lo = jnp.asarray(lo).astype(jnp.uint32)
+        neg = (hi >> 31) != 0
+        code_hi = jnp.where(neg, ~hi, hi | jnp.uint32(0x80000000))
+        code_lo = jnp.where(neg, ~lo, lo)
+        return jnp.stack([code_hi, code_lo], axis=1)
 
     def decode(self, words):
         w = np.asarray(words, np.uint64)
@@ -224,12 +282,23 @@ class CompositeCodec(Codec):
     order; descending components are bit-inverted within their width, so
     one unsigned sort realizes any asc/desc mix.  ``encode`` takes a
     sequence of columns (one per spec), ``decode`` returns the tuple
-    back."""
+    back.
+
+    Composites compare and hash *by value* (their spec tuple): the query
+    layer builds a fresh CompositeCodec per call, and the fused
+    encode→sort programs are lru-cached on the codec — identity hashing
+    would retrace every query."""
 
     def __init__(self, specs: Sequence[ColumnSpec]):
         assert len(specs) >= 1, "composite key needs at least one column"
         self.specs = tuple(specs)
         self.bits = sum(s.codec.bits for s in self.specs)
+
+    def __eq__(self, other):
+        return type(other) is CompositeCodec and self.specs == other.specs
+
+    def __hash__(self):
+        return hash(self.specs)
 
     def _component_chunks(self, spec: ColumnSpec, words: jnp.ndarray):
         """A component's code as (word, width) chunks, inverted if
@@ -242,13 +311,21 @@ class CompositeCodec(Codec):
             chunks.append((w & _mask(wbits), wbits))
         return chunks
 
-    def encode(self, cols) -> jnp.ndarray:
+    def prepare(self, cols):
         cols = list(cols)
         assert len(cols) == len(self.specs), (
             f"composite expects {len(self.specs)} columns, got {len(cols)}")
+        return tuple(spec.codec.prepare(col)
+                     for spec, col in zip(self.specs, cols))
+
+    def encode_fn(self, prepped) -> jnp.ndarray:
+        assert len(prepped) == len(self.specs), (
+            f"composite expects {len(self.specs)} prepared columns, "
+            f"got {len(prepped)}")
         chunks = []
-        for spec, col in zip(self.specs, cols):
-            chunks.extend(self._component_chunks(spec, spec.codec.encode(col)))
+        for spec, pre in zip(self.specs, prepped):
+            chunks.extend(
+                self._component_chunks(spec, spec.codec.encode_fn(pre)))
         n = chunks[0][0].shape[0]
         out, cur, used = [], jnp.zeros((n,), jnp.uint32), 0
         for arr, w in chunks:

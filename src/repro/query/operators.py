@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import JnpBackend, PlanExecutor, SortPlan
+from repro.core import JnpBackend, PlanExecutor, SortPlan, dispatch
 from repro.query.codec import (
     Codec,
     ColumnSpec,
@@ -61,7 +61,10 @@ __all__ = [
     "group_by",
     "distinct",
     "top_k",
+    "active_words",
     "sort_rowids",
+    "sort_rowids_fused",
+    "sort_rowids_batched",
 ]
 
 def _stream_ops(table):
@@ -94,8 +97,14 @@ def _normalize_by(by) -> Tuple[Tuple[str, bool], ...]:
     return tuple(out)
 
 
-def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
-    """(CompositeCodec, encoded (n, W) words) for the key columns."""
+def _key_data(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
+    """(CompositeCodec, prepared raw key columns) — the fused-path input.
+
+    ``prepare`` is the host-side dtype bitcast only (free for int/float32
+    columns, one uint64→2×uint32 view for float64); the order-preserving
+    *encode* never runs here — it traces into the sort chain
+    (:func:`sort_rowids_fused`), so no operator materializes the ``(n, W)``
+    code matrix on the host."""
     specs, cols = [], []
     for name, asc in _normalize_by(by):
         col = table.column(name)
@@ -103,7 +112,52 @@ def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
         specs.append(ColumnSpec(codec, ascending=asc))
         cols.append(col)
     codec = CompositeCodec(specs)
-    return codec, codec.encode(cols)
+    return codec, codec.prepare(cols)
+
+
+def _composite_for(table: Table, by, codecs: Optional[Mapping[str, Codec]]):
+    """(CompositeCodec, encoded (n, W) words) for the key columns —
+    the eager-encode variant (tests and the stream path, which stores
+    encoded words in fragments, still want materialized codes)."""
+    codec, prepped = _key_data(table, by, codecs)
+    return codec, codec.encode_fn(prepped)
+
+
+def active_words(bits: int, low_bits: Optional[int] = None,
+                 ) -> Tuple[Tuple[int, int], ...]:
+    """``(word index, undetermined low bits)`` pairs for a ``bits``-wide
+    code, MSB word first — the words a sort must actually rank.
+
+    ``low_bits`` narrows to the undetermined low code bits when every row
+    provably shares bits ``[low_bits, bits)`` (the external sort's
+    partitions): fully-shared words drop out entirely and the boundary
+    word keeps only its undetermined low bits.  ``None`` = all bits
+    undetermined."""
+    widths = word_widths(bits)
+    low_bits = bits if low_bits is None else int(low_bits)
+    assert 0 <= low_bits <= bits, f"low_bits={low_bits} not in 0..{bits}"
+    # word j covers code bits [lo_j, lo_j + widths[j]); its undetermined
+    # low bits are those below low_bits
+    active, lo = [], bits
+    for j, wj in enumerate(widths):
+        lo -= wj
+        eff = min(low_bits - lo, wj)
+        if eff > 0:
+            active.append((j, eff))
+    return tuple(active)
+
+
+def _resolve_plans(n: int, active, plans):
+    """Per-active-word plans: caller-pinned, or one autotune-cache consult
+    per active word (:func:`~repro.core.autotune.tuned_plan`)."""
+    if plans is None:
+        from repro.core.autotune import tuned_plan
+
+        plans = tuple(tuned_plan(n, eff) for _, eff in active)
+    assert len(plans) == len(active), (
+        f"{len(active)} active words need {len(active)} plans, "
+        f"got {len(plans)}")
+    return tuple(plans)
 
 
 @functools.lru_cache(maxsize=256)
@@ -145,7 +199,45 @@ def _rowid_chain(active: Tuple[Tuple[int, int], ...],
             perm = perm[sub]
         return words[perm], perm
 
-    return chain
+    return dispatch.wrap("query.chain", chain)
+
+
+@functools.lru_cache(maxsize=256)
+def _fused_chain(codec: CompositeCodec, active: Tuple[Tuple[int, int], ...],
+                 plans: Tuple[SortPlan, ...], pairs_path: bool):
+    """The fused encode→sort program: one jitted chain per (codec, active
+    words, plans) config, taking *prepared raw columns* and tracing
+    ``codec.encode_fn`` → word split → per-word pass chain as ONE program.
+
+    The encode is elementwise, so XLA fuses it straight into pass 0's
+    digit extraction (the executor's ``encode=`` hook carries it for the
+    single-word pairs path) — the ``(n, W)`` code matrix exists only as a
+    value inside the trace, never on the host.  Cache keying leans on
+    :class:`CompositeCodec` hashing by *value* (specs), so two queries
+    over equal-typed key columns share one compiled program.
+    """
+    assert len(active) == len(plans)
+
+    @jax.jit
+    def chain(prepped):
+        n = jax.tree_util.tree_leaves(prepped)[0].shape[0]
+        ex = PlanExecutor(JnpBackend())
+        if pairs_path:
+            # raw columns enter the executor; pass 0 reads digits straight
+            # off the fused encode (single full-width word: the code IS
+            # column 0, so reconstruct-on-MSD stays valid)
+            sorted_keys, rowids = ex.run_pairs(
+                prepped, jnp.arange(n, dtype=jnp.int32), plans[0],
+                encode=lambda pre: codec.encode_fn(pre)[:, 0])
+            return sorted_keys.astype(jnp.uint32)[:, None], rowids
+        words = codec.encode_fn(prepped)
+        perm = jnp.arange(n, dtype=jnp.int32)
+        for (j, _), plan in zip(reversed(active), reversed(plans)):
+            sub = ex.run_argsort(words[perm, j], plan)
+            perm = perm[sub]
+        return words[perm], perm
+
+    return dispatch.wrap("query.chain", chain)
 
 
 def sort_rowids(words: jnp.ndarray, bits: int,
@@ -177,30 +269,122 @@ def sort_rowids(words: jnp.ndarray, bits: int,
     """
     widths = word_widths(bits)
     n = words.shape[0]
-    low_bits = bits if low_bits is None else int(low_bits)
-    assert 0 <= low_bits <= bits, f"low_bits={low_bits} not in 0..{bits}"
     if n == 0:
         return words, jnp.zeros((0,), jnp.int32)
-    # word j covers code bits [lo_j, lo_j + widths[j]); its undetermined
-    # low bits are those below low_bits
-    active, lo = [], bits
-    for j, wj in enumerate(widths):
-        lo -= wj
-        eff = min(low_bits - lo, wj)
-        if eff > 0:
-            active.append((j, eff))
+    active = active_words(bits, low_bits)
     if not active:
         # every code bit shared: arrival order is the stable sorted order
         return words, jnp.arange(n, dtype=jnp.int32)
-    if plans is None:
-        from repro.core.autotune import tuned_plan
-
-        plans = tuple(tuned_plan(n, eff) for _, eff in active)
-    assert len(plans) == len(active), (
-        f"{len(active)} active words need {len(active)} plans, "
-        f"got {len(plans)}")
+    plans = _resolve_plans(n, active, plans)
     pairs_path = len(widths) == 1 and active[0][1] == widths[0]
-    return _rowid_chain(tuple(active), tuple(plans), pairs_path)(words)
+    return _rowid_chain(active, plans, pairs_path)(words)
+
+
+@functools.lru_cache(maxsize=64)
+def _mask_probe(codec: CompositeCodec):
+    """One tiny jitted program per codec: the OR-reduction of
+    ``word ^ word[0]`` across rows, per code word — a ``(W,)`` uint32
+    mask of the bits that actually *vary* in this dataset.  Bits no two
+    rows differ on cannot reorder anything, so the fused sort narrows
+    each word to its varying low field (the in-memory sibling of the
+    stream path's shared-prefix cut) — low-entropy keys (small int
+    domains, category columns) sort in one or two passes instead of a
+    full-width chain.  The probe is O(nW) reads and returns W scalars;
+    it never materializes the code matrix on the host."""
+
+    @jax.jit
+    def masks(prepped):
+        w = codec.encode_fn(prepped)
+        return jax.lax.reduce(w ^ w[:1], np.uint32(0),
+                              jax.lax.bitwise_or, (0,))
+
+    return dispatch.wrap("query.probe", masks)
+
+
+def sort_rowids_fused(codec: CompositeCodec, prepped,
+                      plans: Optional[Tuple[SortPlan, ...]] = None):
+    """:func:`sort_rowids` from *raw* key columns: ``(sorted_words,
+    rowids)`` in one fused jitted dispatch, encode traced into the chain.
+
+    ``prepped`` is ``codec.prepare(cols)`` — the host bitcast of the raw
+    columns (see :func:`_key_data`); everything order-preserving happens
+    inside the fused program (:func:`_fused_chain`).  This is the path
+    every in-memory operator sorts through; the stream path keeps
+    :func:`sort_rowids` because its partitions are *stored* encoded.
+
+    When ``plans`` is not pinned, a used-bits probe (:func:`_mask_probe`)
+    first narrows every word to the bits that vary across rows: the
+    skipped bits are row-invariant, so the permutation is bit-identical
+    to the full-width sort while low-entropy keys shed most of their
+    pass work.  Narrowed single-word sorts take the argsort path — the
+    pairs path's MSD reconstruct rebuilds only the sorted bits and would
+    zero the shared high bits of the returned words."""
+    n = jax.tree_util.tree_leaves(prepped)[0].shape[0]
+    widths = word_widths(codec.bits)
+    if n == 0:
+        return (jnp.zeros((0, len(widths)), jnp.uint32),
+                jnp.zeros((0,), jnp.int32))
+    active = active_words(codec.bits)
+    if plans is None:
+        masks = np.asarray(_mask_probe(codec)(prepped))
+        active = tuple(
+            (j, min(eff, int(masks[j]).bit_length()))
+            for j, eff in active if int(masks[j]))
+    plans = _resolve_plans(n, active, plans)
+    pairs_path = (len(widths) == 1 and len(active) == 1
+                  and active[0][1] == widths[0])
+    return _fused_chain(codec, active, plans, pairs_path)(prepped)
+
+
+@functools.lru_cache(maxsize=256)
+def _segmented_chain(active: Tuple[Tuple[int, int], ...],
+                     plans: Tuple[SortPlan, ...], seg_len_log2: int):
+    """One jitted *batched* pass chain: B concatenated equal-length
+    partitions sort independently (within-segment) in one program —
+    per-word :meth:`~repro.core.executor.PlanExecutor.run_segmented_argsort`
+    composed exactly like :func:`_rowid_chain`'s argsort chain.  Ranks
+    never cross the positional segments, so the stable per-word
+    composition is lexicographic within every partition."""
+    assert len(active) == len(plans)
+
+    @jax.jit
+    def chain(words):
+        n = words.shape[0]
+        ex = PlanExecutor(JnpBackend())
+        perm = jnp.arange(n, dtype=jnp.int32)
+        for (j, _), plan in zip(reversed(active), reversed(plans)):
+            sub = ex.run_segmented_argsort(words[perm, j], plan,
+                                           seg_len_log2)
+            perm = perm[sub]
+        return words[perm], perm
+
+    return dispatch.wrap("query.segmented_chain", chain)
+
+
+def sort_rowids_batched(words: jnp.ndarray, bits: int, seg_len_log2: int,
+                        plans: Optional[Tuple[SortPlan, ...]] = None,
+                        low_bits: Optional[int] = None):
+    """Batched :func:`sort_rowids`: ``words`` holds ``B`` independent
+    partitions of ``L = 2**seg_len_log2`` rows laid end to end; every
+    partition sorts stably *within its own segment* through ONE jitted
+    dispatch (``rowids[b*L:(b+1)*L]`` indexes inside partition ``b``).
+
+    This is the stream path's shared-dispatch mode: partitions padded to
+    one power-of-two length with all-ones sentinel rows (which sort last
+    per segment) batch into a single program instead of B chain
+    dispatches.  ``low_bits``/``plans`` mean exactly what they mean in
+    :func:`sort_rowids`, with plans sized for the per-partition length
+    ``L`` — every segment is an independent L-row sort."""
+    n = words.shape[0]
+    L = 1 << seg_len_log2
+    assert n % L == 0, f"batch length {n} not a multiple of L={L}"
+    if n == 0:
+        return words, jnp.zeros((0,), jnp.int32)
+    active = active_words(bits, low_bits)
+    if not active:
+        return words, jnp.arange(n, dtype=jnp.int32)
+    plans = _resolve_plans(L, active, plans)
+    return _segmented_chain(active, plans, int(seg_len_log2))(words)
 
 
 def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
@@ -227,8 +411,8 @@ def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
     assert placement is None, (
         "placement is the out-of-core fragment store; an in-memory Table "
         "sorts in place — wrap it in a StreamTable to place on a mesh")
-    codec, words = _composite_for(table, by, codecs)
-    _, rowids = sort_rowids(words, codec.bits, plans)
+    codec, prepped = _key_data(table, by, codecs)
+    _, rowids = sort_rowids_fused(codec, prepped, plans)
     return table.take(rowids)
 
 
@@ -236,6 +420,22 @@ def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
 # uniform-ish key column prunes hard (1024 bins), narrow enough that the
 # histogram is negligible next to one plan pass.
 _TOPK_PRUNE_BITS = 10
+
+
+@functools.lru_cache(maxsize=64)
+def _prune_hist(codec: CompositeCodec, top_bits: int, shift: int):
+    """Jitted top-k prune histogram from prepared raw columns: fused
+    encode → leading ``top_bits`` digit → bincount (+ the per-row prefix,
+    which the candidate mask needs back on the host)."""
+
+    @jax.jit
+    def hist(prepped):
+        w0 = codec.encode_fn(prepped)[:, 0]
+        prefix = (w0 >> shift).astype(jnp.int32)
+        counts = jnp.zeros((1 << top_bits,), jnp.int32).at[prefix].add(1)
+        return counts, prefix
+
+    return hist
 
 
 def top_k(table: Table, by, k: int,
@@ -269,21 +469,22 @@ def top_k(table: Table, by, k: int,
         "sorts in place — wrap it in a StreamTable to place on a mesh")
     if k <= 0:
         return table.head(0)
-    codec, words = _composite_for(table, by, codecs)
-    n = words.shape[0]
+    codec, prepped = _key_data(table, by, codecs)
+    n = jax.tree_util.tree_leaves(prepped)[0].shape[0]
     if k < n:
         top_bits = min(_TOPK_PRUNE_BITS, word_widths(codec.bits)[0])
         shift = word_widths(codec.bits)[0] - top_bits
-        prefix = (words[:, 0] >> shift).astype(jnp.int32)
-        counts = jnp.zeros((1 << top_bits,), jnp.int32).at[prefix].add(1)
+        # one jitted dispatch: fused encode → leading-digit histogram
+        counts, prefix = _prune_hist(codec, top_bits, shift)(prepped)
         cut = jnp.searchsorted(jnp.cumsum(counts), k, side="left")
         rows = jnp.nonzero(prefix <= cut)[0].astype(jnp.int32)  # host sync
         if rows.shape[0] < n:
             # the candidate subset re-resolves its own (tuned) plans:
             # caller-pinned plans were sized for n rows, not ~k
-            _, sub = sort_rowids(words[rows], codec.bits)
+            sub_pre = jax.tree_util.tree_map(lambda a: a[rows], prepped)
+            _, sub = sort_rowids_fused(codec, sub_pre)
             return table.take(rows[sub[:k]])
-    _, rowids = sort_rowids(words, codec.bits, plans)
+    _, rowids = sort_rowids_fused(codec, prepped, plans)
     return table.take(rowids[:k])
 
 
@@ -338,8 +539,8 @@ def distinct(table: Table, by=None,
         "distinct is in-memory only; stream through order_by/group_by "
         "(repro.stream) or materialize with StreamTable.to_table()")
     by = _normalize_by(by if by is not None else table.column_names)
-    codec, words = _composite_for(table, by, codecs)
-    sorted_words, rowids = sort_rowids(words, codec.bits, plans)
+    codec, prepped = _key_data(table, by, codecs)
+    sorted_words, rowids = sort_rowids_fused(codec, prepped, plans)
     starts = _segments(sorted_words)
     return table.take(jnp.asarray(np.asarray(rowids)[starts]))
 
@@ -374,8 +575,8 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
         "placement is the out-of-core fragment store; an in-memory Table "
         "sorts in place — wrap it in a StreamTable to place on a mesh")
     by = _normalize_by(by)
-    codec, words = _composite_for(table, by, codecs)
-    sorted_words, rowids = sort_rowids(words, codec.bits, plans)
+    codec, prepped = _key_data(table, by, codecs)
+    sorted_words, rowids = sort_rowids_fused(codec, prepped, plans)
     starts = _segments(sorted_words)
     rid = np.asarray(rowids)
     n = rid.shape[0]
@@ -428,15 +629,15 @@ def sort_merge_join(left: Table, right: Table, on,
     by = _normalize_by(on)
     for name, asc in by:
         assert asc, "join keys have no direction; use plain column names"
-    codec_l, words_l = _composite_for(left, on, codecs)
-    codec_r, words_r = _composite_for(right, on, codecs)
+    codec_l, pre_l = _key_data(left, on, codecs)
+    codec_r, pre_r = _key_data(right, on, codecs)
     assert [(type(s.codec), s.codec.bits) for s in codec_l.specs] == \
         [(type(s.codec), s.codec.bits) for s in codec_r.specs], (
         "join key columns must encode identically (same codec type and "
         "width per column) on both sides; pass an explicit shared codec "
         "via codecs=")
-    lc, lrid = sort_rowids(words_l, codec_l.bits, plans)
-    rc, rrid = sort_rowids(words_r, codec_r.bits, plans)
+    lc, lrid = sort_rowids_fused(codec_l, pre_l, plans)
+    rc, rrid = sort_rowids_fused(codec_r, pre_r, plans)
     lc, rc = np.asarray(lc), np.asarray(rc)
     lo = _words_searchsorted(rc, lc, side="left")
     hi = _words_searchsorted(rc, lc, side="right")

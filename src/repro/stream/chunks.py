@@ -183,6 +183,13 @@ class PlacementStore:
     #: host threads would interleave collectives and deadlock.
     supports_concurrent_sorts: bool = True
 
+    #: whether :meth:`sort_rows_batched` may fuse several partitions into
+    #: one padded dispatch.  The host-side default sorts batched fine;
+    #: collective-backed stores say False (their per-partition sort is a
+    #: mesh program — concatenating partitions would reshard them) and
+    #: fall back to the serial loop.
+    supports_batched_sorts: bool = True
+
     def put(self, *arrays: np.ndarray, partition: Optional[int] = None):
         """Store one fragment (≥ 1 equal-length arrays, keys first);
         returns its fragment id.  ``partition`` is the owning partition
@@ -230,15 +237,17 @@ class PlacementStore:
         return frag_ids
 
     def sort_rows(self, words: np.ndarray, payloads: tuple, bits: int,
-                  sort_bits: int, budget: "MemoryBudget"):
+                  sort_bits: int, budget: "MemoryBudget", plans=None):
         """Stable sort of one partition's rows on their low ``sort_bits``
         undetermined code bits (the shared ``[sort_bits, bits)`` prefix is
         implied by the partition's bin range — sorting it again would be
         pure waste).  Rows are padded to the power-of-two ceiling with
         all-ones codes (greater-or-equal to every real code, arriving
         later → stably last), so distinct partition lengths share
-        O(log budget) jit traces.  Returns ``(sorted_words, payloads in
-        sorted order)``."""
+        O(log budget) jit traces.  ``plans`` pins per-active-word sort
+        plans (the external loop hoists one resolution per (length,
+        sort-bits) bucket); None resolves per call.  Returns
+        ``(sorted_words, payloads in sorted order)``."""
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2
@@ -257,7 +266,7 @@ class PlacementStore:
         # device sorted output are simultaneously alive (charged as 3x)
         budget.charge(padded, padded, padded, *payloads)
         sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits,
-                                           low_bits=sort_bits)
+                                           plans=plans, low_bits=sort_bits)
         sorted_words = np.asarray(sorted_words)[:m]
         rowids = np.asarray(rowids)[:m]
         # all-ones sentinels sort after every real row, so the first m
@@ -266,6 +275,57 @@ class PlacementStore:
         gathered = tuple(np.asarray(p)[rowids] for p in payloads)
         budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
         return sorted_words, gathered
+
+    def sort_rows_batched(self, parts, bits: int, sort_bits: int,
+                          budget: "MemoryBudget", plans=None):
+        """Sort several partitions through ONE padded dispatch.
+
+        ``parts`` is a sequence of ``(words, payloads)`` partitions whose
+        padded power-of-two lengths coincide; each is padded to the shared
+        length ``L`` with all-ones sentinel rows (stably last *within its
+        segment*) and the concatenated ``(B*L, W)`` matrix ranks through
+        the executor's segment-aware batched mode
+        (:func:`~repro.query.operators.sort_rowids_batched`) — one jitted
+        program instead of ``B`` chain dispatches.  Output is bit-identical
+        to ``B`` serial :meth:`sort_rows` calls (each segment is the same
+        stable narrowed sort); stores whose sorts are collective programs
+        opt out via :attr:`supports_batched_sorts` and take the serial
+        loop.  Returns a list of ``(sorted_words, gathered payloads)``."""
+        parts = list(parts)
+        if (not self.supports_batched_sorts or len(parts) <= 1
+                or sort_bits == 0):
+            return [self.sort_rows(w, p, bits, sort_bits, budget,
+                                   plans=plans) for w, p in parts]
+        import jax.numpy as jnp
+
+        from repro.core.fractal_tree import ceil_log2
+        from repro.query.operators import sort_rowids_batched
+
+        seg_log2 = ceil_log2(max(max(w.shape[0] for w, _ in parts), 2))
+        L = 1 << seg_log2
+        num_words = parts[0][0].shape[1]
+        padded = np.full((len(parts) * L, num_words), 0xFFFFFFFF, np.uint32)
+        for b, (w, _) in enumerate(parts):
+            padded[b * L:b * L + w.shape[0]] = w
+        all_payloads = [p for _, pays in parts for p in pays]
+        budget.charge(padded, padded, padded, *all_payloads)
+        sorted_words, rowids = sort_rowids_batched(
+            jnp.asarray(padded), bits, seg_log2, plans=plans,
+            low_bits=sort_bits)
+        sorted_words = np.asarray(sorted_words)
+        rowids = np.asarray(rowids)
+        out = []
+        for b, (w, pays) in enumerate(parts):
+            m = int(w.shape[0])
+            sw = sorted_words[b * L:b * L + m]
+            rid = rowids[b * L:b * L + m] - b * L
+            # sentinels sort last per segment: the first m slots of
+            # segment b hold exactly partition b's real rows
+            assert m == L or int(rid.max(initial=-1)) < m
+            out.append((sw, tuple(np.asarray(p)[rid] for p in pays)))
+        budget.charge(padded, sorted_words, rowids, *all_payloads,
+                      *[p for _, g in out for p in g])
+        return out
 
     def __enter__(self) -> "PlacementStore":
         return self
@@ -295,6 +355,12 @@ class RunStore(PlacementStore):
         self._next_id = 0
         self._id_lock = threading.Lock()  # overlapped workers also spill
         self._widths: dict = {}  # run id -> number of arrays
+        # virtual slice fragments: slice id -> (base run id, lo, hi); a
+        # base run holding live slices is refcounted and deleted when the
+        # last slice goes (chunk-level spill: distribute writes ONE
+        # pid-sorted run per chunk, partitions reference row ranges of it)
+        self._slices: dict = {}
+        self._base_refs: dict = {}
         self.put_log: list = []
         self.get_log: list = []
         if self._own_root:  # a private temp dir never outlives the store
@@ -319,7 +385,16 @@ class RunStore(PlacementStore):
 
     def get(self, rid: int, mmap: bool = False):
         """Load one run back as a tuple of arrays (memory-maps with
-        ``mmap=True`` — resident page by page, the merge path's trick)."""
+        ``mmap=True`` — resident page by page, the merge path's trick).
+        A slice fragment reads its row range off the memory-mapped base
+        run — only that range's pages, never the sibling partitions'."""
+        if rid in self._slices:
+            base, lo, hi = self._slices[rid]
+            self.get_log.append(rid)
+            return tuple(
+                np.load(self._path(base, j), mmap_mode="r",
+                        allow_pickle=False)[lo:hi]
+                for j in range(self._widths[base]))
         assert rid in self._widths, f"no run {rid} in store"
         self.get_log.append(rid)
         mode = "r" if mmap else None
@@ -328,11 +403,48 @@ class RunStore(PlacementStore):
             for j in range(self._widths[rid]))
 
     def delete(self, rid: int) -> None:
+        if rid in self._slices:
+            base, _, _ = self._slices.pop(rid)
+            self._base_refs[base] -= 1
+            if self._base_refs[base] == 0:  # last slice: drop the base run
+                del self._base_refs[base]
+                self.delete(base)
+            return
         for j in range(self._widths.pop(rid)):
             try:
                 os.remove(self._path(rid, j))
             except OSError:
                 pass
+
+    def distribute(self, words: np.ndarray, payloads: tuple,
+                   pid: np.ndarray, num_partitions: int) -> list:
+        """Chunk-level spill: ONE pid-sorted run for the whole chunk, and
+        per-partition *slice* fragments referencing row ranges of it —
+        O(chunks) ``.npy`` files instead of O(chunks × partitions), the
+        same bytes.  Rows with ``pid < 0`` (pruned partitions) never reach
+        disk; slice reads memory-map only their own range, and the base
+        run is deleted when its last slice is."""
+        frag_ids: list = [[] for _ in range(num_partitions)]
+        order = np.argsort(pid, kind="stable")  # arrival kept within pid
+        pid_sorted = pid[order]
+        bounds = np.searchsorted(pid_sorted, np.arange(num_partitions + 1))
+        keep = order[bounds[0]:]  # pid == -1 rows fall before bounds[0]
+        if keep.shape[0] == 0:
+            return frag_ids
+        base = self.put(words[keep], *(p[keep] for p in payloads))
+        refs = 0
+        for i in range(num_partitions):
+            lo, hi = bounds[i] - bounds[0], bounds[i + 1] - bounds[0]
+            if hi > lo:
+                with self._id_lock:
+                    sid = self._next_id
+                    self._next_id += 1
+                self._slices[sid] = (base, int(lo), int(hi))
+                refs += 1
+                self.put_log.append(sid)
+                frag_ids[i].append(sid)
+        self._base_refs[base] = refs
+        return frag_ids
 
     def run_ids(self) -> tuple:
         return tuple(sorted(self._widths))
@@ -351,6 +463,8 @@ class RunStore(PlacementStore):
     def close(self) -> None:
         """Drop every run (and the store dir, if this store created it)."""
         self._widths.clear()
+        self._slices.clear()
+        self._base_refs.clear()
         if self._own_root:
             self._cleanup()
 

@@ -64,6 +64,12 @@ class DeviceShardStore(PlacementStore):
     #: so the external loop keeps this store sequential.
     supports_concurrent_sorts = False
 
+    #: each partition sort is a mesh-wide program already sharded over
+    #: every device; concatenating partitions into one padded batch would
+    #: re-shard them for no new parallelism, so batched dispatch falls
+    #: back to the serial per-partition loop here.
+    supports_batched_sorts = False
+
     def __init__(self, mesh=None, axis: str = "shards", batch: int = 1024,
                  max_bins_log2: int = 16):
         import jax
@@ -234,7 +240,7 @@ class DeviceShardStore(PlacementStore):
         return self._sorters[eff_bits]
 
     def sort_rows(self, words: np.ndarray, payloads: tuple, bits: int,
-                  sort_bits: int, budget: MemoryBudget):
+                  sort_bits: int, budget: MemoryBudget, plans=None):
         """Stable distributed sort of one partition on its undetermined
         low ``sort_bits``: per active code word (least-significant first)
         one DistributedBackend pairs run places the word column at its
@@ -242,7 +248,10 @@ class DeviceShardStore(PlacementStore):
         the payload — stability across shard boundaries is the backend's
         (device, arrival) tie-break.  Non-device payload columns gather on
         the host by the final permutation (x64-off jax cannot carry
-        int64/float64 through collectives faithfully)."""
+        int64/float64 through collectives faithfully).  ``plans`` (the
+        external loop's hoisted local plans) is accepted for protocol
+        compatibility and ignored: the distributed program fixes its own
+        wide per-word passes (``max_bins_log2``)."""
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2

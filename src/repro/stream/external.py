@@ -59,7 +59,8 @@ from typing import Callable, Iterator, Optional, Tuple
 import numpy as np
 
 from repro.core.executor import PlanExecutor
-from repro.core.sort_plan import DigitPass
+from repro.core.fractal_tree import ceil_log2
+from repro.core.sort_plan import DigitPass, quantize_sort_bits
 from repro.query.codec import word_widths
 from repro.stream.chunks import (
     ChunkSource,
@@ -248,13 +249,39 @@ def stream_sorted_words(
                 store.distribute(words, payloads, pid, len(partitions))):
             frag_ids[i].extend(ids)
 
+    # per-call plan hoisting: tuned plans resolve ONCE per (padded
+    # length, sort-bits) bucket, not once per partition — the autotune
+    # cache is consulted O(buckets) times per external-sort call.
+    plan_cache: dict = {}
+
+    def plans_for(padded_len, sort_bits):
+        key = (padded_len, sort_bits)
+        if key not in plan_cache:
+            from repro.core.autotune import tuned_plan
+            from repro.query.operators import active_words
+
+            plan_cache[key] = tuple(
+                tuned_plan(padded_len, eff)
+                for _, eff in active_words(bits, sort_bits))
+        return plan_cache[key]
+
+    def part_bucket(part):
+        """(padded pow2 length, quantized sort bits) — the shared-trace
+        bucket a partition sorts in.  Sort bits round up to multiples of
+        8 (the rounded-up bits are shared-prefix, ranking them reorders
+        nothing), so near-miss widths share one compiled chain."""
+        L = 1 << ceil_log2(max(part.count, 1))
+        sort_bits = quantize_sort_bits(hi - part.shared_field_bits(w), bits)
+        return L, sort_bits
+
     def sorted_partition(part, frags):
         words, payloads = _load_fragments(store, frags, n_payloads, budget)
         # the partition's bin range pins the top shared_field_bits of its
         # field: only the code bits below stay undetermined, so the sort
         # narrows to them (a single-bin partition drops the whole field)
-        sort_bits = hi - part.shared_field_bits(w)
-        return store.sort_rows(words, payloads, bits, sort_bits, budget)
+        L, sort_bits = part_bucket(part)
+        return store.sort_rows(words, payloads, bits, sort_bits, budget,
+                               plans=plans_for(L, sort_bits))
 
     # sort-and-emit, partition (= key range) order.  With workers > 1 a
     # lookahead pool loads+sorts upcoming in-budget partitions while the
@@ -269,8 +296,75 @@ def stream_sorted_words(
     pending: dict = {}
     if workers > 1 and limit_rows is None and store.supports_concurrent_sorts:
         pool = ThreadPoolExecutor(max_workers=workers)
+
+    # batched dispatch: same-bucket (padded pow2 length, quantized sort
+    # bits) partitions small enough that several padded copies fit the
+    # budget at once sort as ONE segment-aware program.  Greedy packing
+    # makes two *consecutive* in-budget partitions always overflow a
+    # shared load (adjacent counts sum past budget_rows by construction),
+    # so groups form across intervening partitions — the skew regime,
+    # where tiny flushed partitions interleave with oversized single
+    # bins.  Out-of-order members' sorted rows spill back to the store as
+    # one pre-sorted fragment and re-load at their emission turn, so
+    # emission order, peak residency, and output stay exactly the serial
+    # path's (any stable decomposition of the same partition yields THE
+    # stable order).  Everything stays a singleton under limit_rows
+    # (batching would load fragments the prune proves dead), under the
+    # worker pool (the pool already pipelines), and on stores whose
+    # sorts can't concatenate.
+    group_of: dict = {}      # head index -> member indices, partition order
+    if pool is None and limit_rows is None and store.supports_batched_sorts:
+        open_heads: dict = {}  # bucket -> open group's head index
+        for i, (part, _) in enumerate(items):
+            if part.oversized(budget_rows):
+                continue
+            L, qb = part_bucket(part)
+            b_max = budget_rows // L
+            if b_max < 2 or qb == 0:
+                continue  # batch-ineligible: full-budget load, or no-op sort
+            head = open_heads.get((L, qb))
+            if head is not None and len(group_of[head]) < b_max:
+                group_of[head].append(i)
+            else:
+                open_heads[(L, qb)] = i
+                group_of[i] = [i]
+        group_of = {h: g for h, g in group_of.items() if len(g) > 1}
+    presorted: dict = {}     # member index -> spilled pre-sorted fragment
     try:
-        for idx, (part, frags) in enumerate(items):
+        for idx in range(len(items)):
+            part, frags = items[idx]
+            if idx in group_of:
+                entries = [items[i] for i in group_of[idx]]
+                L, sort_bits = part_bucket(part)
+                loaded = [
+                    _load_fragments(store, fr, n_payloads, budget)
+                    for _, fr in entries]
+                results = store.sort_rows_batched(
+                    loaded, bits, sort_bits, budget,
+                    plans=plans_for(L, sort_bits))
+                # head emits now; later members spill back pre-sorted and
+                # re-load in partition order at their own turn
+                for i, (_, fr), (words, payloads) in zip(
+                        group_of[idx], entries, results):
+                    if i != idx:
+                        presorted[i] = store.put(words, *payloads)
+                    for rid in fr:
+                        store.delete(rid)
+                words, payloads = results[0]
+                if words.shape[0]:
+                    yield words, payloads
+                    emitted += int(words.shape[0])
+                continue
+            if idx in presorted:
+                rid = presorted.pop(idx)
+                arrays = store.get(rid)
+                words, payloads = arrays[0], tuple(arrays[1:])
+                budget.charge(words, *payloads)
+                if words.shape[0]:
+                    yield words, payloads
+                    emitted += int(words.shape[0])
+                store.delete(rid)
+                continue
             if room() == 0:
                 for rid in frags:
                     store.delete(rid)

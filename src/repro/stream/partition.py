@@ -25,11 +25,14 @@ is again discriminating).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core.executor import JnpBackend, PlanExecutor
 from repro.core.fractal_tree import ceil_log2
 from repro.core.sort_plan import DigitPass
@@ -47,6 +50,20 @@ __all__ = [
 #: partition sizes), narrow enough that the counts array is noise next to
 #: one chunk.  The same trade as the query layer's top-k pruning digit.
 DEFAULT_PARTITION_BITS = 10
+
+#: process-wide default executor for callers that pass none: the jitted
+#: per-chunk counts programs cache on the executor instance, so a shared
+#: default keeps the skew recursion's nested histogram calls on one set
+#: of compiled traces.
+_DEFAULT_EX: Optional[PlanExecutor] = None
+
+
+def _default_executor() -> PlanExecutor:
+    global _DEFAULT_EX
+    if _DEFAULT_EX is None:
+        _DEFAULT_EX = PlanExecutor(JnpBackend())
+    return _DEFAULT_EX
+
 
 #: Rows the device (int32) histogram carry may accumulate before it is
 #: spilled onto the host int64 total: a single bin can hold every row, so
@@ -110,11 +127,28 @@ def streamed_field_counts(
     Returns ``(counts, total_rows)`` — counts as host int64 (the planner
     does python-int arithmetic on them).
     """
-    ex = executor or PlanExecutor(JnpBackend())
+    ex = executor or _default_executor()
     total64 = np.zeros((dp.n_bins,), np.int64)
     carried = None
     window_rows = 0
     total = 0
+    # the whole per-chunk program (digit extraction + sentinel pad +
+    # scatter-add) runs as ONE jitted dispatch; pow2 padding keeps the
+    # trace count at O(log max-chunk) per (dp, pad length).  The program
+    # cache lives ON the executor (keyed by dp and pad length), so the
+    # skew recursion's nested calls — thousands per deep recursion —
+    # reuse compiled traces instead of re-jitting fresh partials.
+    programs: dict = ex.__dict__.setdefault("_chunk_counts_programs", {})
+
+    def counts_program(pad_to):
+        key = (dp, pad_to)
+        if key not in programs:
+            programs[key] = dispatch.wrap(
+                "stream.chunk_counts",
+                jax.jit(functools.partial(ex.digit_counts, dp=dp,
+                                          pad_to=pad_to)))
+        return programs[key]
+
     for chunk in chunk_iter:
         chunk = np.ascontiguousarray(chunk)
         m = int(chunk.shape[0])
@@ -122,8 +156,8 @@ def streamed_field_counts(
             total64 += np.asarray(carried).astype(np.int64)
             carried, window_rows = None, 0
         pad_to = 1 << ceil_log2(max(m, 1))
-        carried = ex.digit_counts(jnp.asarray(chunk.view(np.uint32)), dp,
-                                  init=carried, pad_to=pad_to)
+        carried = counts_program(pad_to)(
+            jnp.asarray(chunk.view(np.uint32)), init=carried)
         window_rows += m
         total += m
     if carried is not None:

@@ -149,7 +149,11 @@ def _encoded_stream(st: StreamTable, by, codecs):
     adapter the external core consumes — key columns encode through the
     same order-preserving codecs as the in-memory operators (codec
     resolved once, on the first chunk; chunk dtypes must be stable), and
-    *every* column rides the spill as a payload."""
+    *every* column rides the spill as a payload.  Each chunk encodes
+    through the codec's cached jitted program
+    (:func:`~repro.query.codec.jit_encode`) — one dispatch per chunk, not
+    one per elementwise encode step."""
+    from repro.query.codec import jit_encode
     from repro.query.operators import _composite_for, _normalize_by
 
     first = st._peek()
@@ -162,7 +166,7 @@ def _encoded_stream(st: StreamTable, by, codecs):
     def chunks_fn():
         for t in st.chunk_tables():
             cols = [t.column(name) for name, _ in by_norm]
-            words = np.asarray(codec.encode(cols), np.uint32)
+            words = np.asarray(jit_encode(codec, cols), np.uint32)
             yield words, tuple(np.asarray(t.column(n)) for n in names)
 
     return codec, names, chunks_fn, row_bytes

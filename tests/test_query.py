@@ -523,17 +523,17 @@ def test_top_k_zero_and_negative_k(rng):
 
 
 def test_rowid_chain_is_cached_across_calls(rng):
-    """The multi-word pass chain must trace once per (widths, plans)
-    config: repeated order_by calls on same-shaped float64 keys hit the
-    lru-cached jitted chain instead of re-dispatching per word."""
-    from repro.query.operators import _rowid_chain
+    """The fused encode→sort chain must trace once per (codec, widths,
+    plans) config: repeated order_by calls on same-shaped float64 keys hit
+    the lru-cached jitted chain instead of re-dispatching per word."""
+    from repro.query.operators import _fused_chain
 
     n = 1500
     t = Table({"d": rng.standard_normal(n).astype(np.float64)})
     order_by(t, "d")
-    before = _rowid_chain.cache_info()
+    before = _fused_chain.cache_info()
     order_by(t, "d")
-    after = _rowid_chain.cache_info()
+    after = _fused_chain.cache_info()
     assert after.hits > before.hits, "second call must reuse the chain"
     assert after.misses == before.misses
 
