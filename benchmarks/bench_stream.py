@@ -23,6 +23,12 @@ Modes (``python -m benchmarks.bench_stream <mode>``):
   bit-exactness assert against the disk path, a hard wall, and a >2×
   relative regression gate against the committed
   ``BENCH_distributed.json``.
+* ``chaos-smoke`` — the smoke point re-run once per disk-store fault
+  site with one injected transient fault (:mod:`repro.core.faults`):
+  each run must absorb the fault through the retry layer and stay
+  bit-exact under a hard wall; the per-site walls are recorded to a
+  ``chaos`` section of ``BENCH_stream.json`` (the smoke-guard baseline
+  point is preserved) under the same overwrite guard.
 """
 
 from __future__ import annotations
@@ -56,7 +62,10 @@ from repro.stream.external import row_cost_bytes
 #   2 — points carry smoke_guard (the >2x relative wall gate's baseline
 #       flag) and the dispatch accounting (chain executions + compiled
 #       programs per external sort, counted via repro.core.dispatch)
-STREAM_JSON_SCHEMA = 2
+#   3 — optional top-level "chaos" section: the chaos-smoke mode's
+#       per-fault-site transient-injection walls (its own provenance;
+#       the smoke-guard point in "points" is untouched)
+STREAM_JSON_SCHEMA = 3
 
 #: chunk sizing uses the subsystem's own single-word row-cost model, so
 #: the benchmark's budget ratio tracks external_sort's actual math
@@ -226,6 +235,69 @@ def smoke(path: str = "BENCH_stream.json",
     return record
 
 
+# Hard wall for the whole chaos-smoke sweep (one smoke-shaped sort per
+# disk fault site, shared jit caches after the first): generous next to
+# the ~5x single-smoke cost, tight against a retry storm or a hang.
+CHAOS_SMOKE_BUDGET_S = 420.0
+
+
+def chaos_smoke(path: str = "BENCH_stream.json",
+                allow_dirty: bool = False) -> dict:
+    """The smoke point re-run once per disk-store fault site with ONE
+    injected transient fault: the retry layer must absorb every one —
+    bit-exact output, budget respected (both asserted inside
+    ``_point``), fault verifiably *fired* — under a hard wall.  Walls
+    land in a ``chaos`` section of ``BENCH_stream.json``; the committed
+    smoke-guard baseline point is preserved, and the write sits under
+    the same dirty-tree overwrite guard as every bench record."""
+    from benchmarks.run import guard_overwrite
+    from repro.core import faults
+
+    sites = [s for s in faults.registered_sites()
+             if s.startswith("run_store.")]
+    assert sites, "no registered disk-store fault sites?"
+    t_all = time.perf_counter()
+    chaos_pts = []
+    for site in sites:
+        with faults.inject(
+                faults.FaultPlan.single(site, "transient", seed=0)) as inj:
+            pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
+        assert inj.fired, (
+            f"{site}: the injected transient never fired — the smoke "
+            "point no longer exercises this site")
+        chaos_pts.append({
+            "site": site,
+            "kind": "transient",
+            "fired_hit": inj.fired[0][2],
+            "wall_s": pt["wall_s"],
+            "bit_exact": True,  # asserted in _point; recorded for the log
+        })
+        row(f"stream/chaos-smoke/{site}", pt["wall_s"],
+            f"kind=transient fired_hit={inj.fired[0][2]} bit_exact=True")
+    total = time.perf_counter() - t_all
+    guard_overwrite(path, allow_dirty)
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, ValueError):
+        record = {"points": []}
+    record["schema"] = STREAM_JSON_SCHEMA
+    record["chaos"] = {
+        "provenance": _provenance(),
+        "wall_s": total,
+        "points": chaos_pts,
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    if total > CHAOS_SMOKE_BUDGET_S:
+        raise SystemExit(
+            f"chaos smoke sweep took {total:.1f}s > {CHAOS_SMOKE_BUDGET_S}s "
+            "budget: the retry path is stalling (or sleeping) under "
+            "injection")
+    return record
+
+
 # Hard wall for the distributed smoke point: the 4-simulated-device
 # external sort pays per-eff-bits shard_map traces on top of the disk
 # path's, all on one CI core; the wall still leaves several x of
@@ -346,6 +418,8 @@ if __name__ == "__main__":
     mode = _argv[0] if _argv else None
     if mode == "smoke":
         smoke(allow_dirty=_allow_dirty)
+    elif mode == "chaos-smoke":
+        chaos_smoke(allow_dirty=_allow_dirty)
     elif mode == "distributed-smoke":
         distributed_smoke(allow_dirty=_allow_dirty)
     else:

@@ -66,3 +66,11 @@ from repro.core.distributed import (
     make_distributed_sort_pairs,
     make_fragment_placer,
 )
+from repro.core.faults import (
+    CorruptFragmentError,
+    FaultPlan,
+    FaultSpec,
+    StoreError,
+    StorePermanentError,
+    TransientStoreError,
+)

@@ -18,23 +18,48 @@ placed onto a jax mesh via one ``all_to_all`` per chunk, partition sorts
 through the DistributedBackend pairs path).  Same loop, two placements —
 "shards are runs".
 
+Every store I/O boundary is also a *fault* boundary
+(:mod:`repro.core.faults`): puts are atomic (tmp file + ``os.replace``)
+with a per-array CRC32 recorded in the run's commit record, gets verify
+those CRCs and raise :class:`~repro.core.faults.CorruptFragmentError` on
+mismatch, transient failures (injected, or real ``EIO``-class
+``OSError``\\ s) retry with bounded backoff
+(``REPRO_STORE_RETRIES``), and everything that finally fails raises a
+*typed* store error — never a bare ``OSError``, never silence.  A store
+opened on a caller-provided root *recovers* its committed runs on
+construction, which is what makes the external sort's crash-resume
+manifest replayable.
+
 The budget is also the subsystem's *allocation tracker*: every point that
-materializes key/payload arrays charges them (:meth:`MemoryBudget.charge`),
-so tests assert — not eyeball — that peak resident bytes stayed under the
+materializes key/payload arrays charges them (:meth:`MemoryBudget.charge`)
+or holds them for an operation's duration (:meth:`MemoryBudget.hold` —
+exception-safe: a partition sort that raises releases its charge), so
+tests assert — not eyeball — that peak resident bytes stayed under the
 cap (the acceptance bar for the ≥ 8×-budget sort).
 """
 
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
+import io
+import json
 import os
 import shutil
 import tempfile
 import threading
 import weakref
+import zlib
 from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
+
+from repro.core import faults
+from repro.core.faults import (
+    CorruptFragmentError,
+    StorePermanentError,
+)
 
 __all__ = [
     "ArraySource",
@@ -47,10 +72,19 @@ __all__ = [
     "temp_store",
 ]
 
+# the disk store's injection sites — registered so the chaos matrix
+# enumerates them (repro.core.faults.registered_sites)
+_SITE_PUT = faults.register_site("run_store.put")
+_SITE_GET = faults.register_site("run_store.get")
+_SITE_DELETE = faults.register_site("run_store.delete")
+_SITE_DISTRIBUTE = faults.register_site("run_store.distribute")
+_SITE_SORT = faults.register_site("run_store.sort_rows")
+
 
 def temp_store() -> "PlacementStore":
     """A fresh private disk-backed store — the default placement when a
-    caller doesn't supply one (the external sort's own working spill)."""
+    caller doesn't supply one (the external sort's own working spill),
+    and the failover target when a device placement dies mid-sort."""
     return RunStore()
 
 
@@ -67,14 +101,21 @@ class MemoryBudget:
     those moments.
 
     ``charge(*arrays)`` records one moment's resident key/payload arrays;
-    ``peak_bytes`` is the high-water mark.  Charging never raises — the
-    budget is a contract the subsystem keeps by construction and tests
-    verify by reading the peak.
+    ``hold(*arrays)`` is the operation-scoped variant — a context manager
+    that keeps the bytes accounted for the operation's whole duration and
+    *always* releases, so a partition sort that raises mid-flight cannot
+    leave phantom residency behind (``held_bytes`` returns to the truth —
+    the exception-path accounting bar).  Concurrent holds sum, and both
+    paths fold the live held total into ``peak_bytes``, so overlapped
+    worker sorts record their true simultaneous footprint.  Charging
+    never raises — the budget is a contract the subsystem keeps by
+    construction and tests verify by reading the peak.
     """
 
     limit_bytes: int
     headroom: int = 2
     peak_bytes: int = dataclasses.field(default=0, compare=False)
+    _held: int = dataclasses.field(default=0, compare=False, repr=False)
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, compare=False, repr=False)
 
@@ -87,16 +128,39 @@ class MemoryBudget:
         return max(1, self.limit_bytes
                    // (self.headroom * max(int(bytes_per_row), 1)))
 
+    @property
+    def held_bytes(self) -> int:
+        """Bytes currently held by in-flight operations (0 when idle —
+        including after an operation *failed*: holds are exception-safe)."""
+        return self._held
+
+    @contextlib.contextmanager
+    def hold(self, *arrays):
+        """Account ``arrays`` as resident for the duration of the
+        ``with`` block.  Released on every exit path — an injected
+        mid-sort fault must not inflate later admission decisions or
+        leave ``peak_bytes`` tracking phantom bytes."""
+        b = sum(int(a.nbytes) for a in arrays if a is not None)
+        with self._lock:
+            self._held += b
+            self.peak_bytes = max(self.peak_bytes, self._held)
+        try:
+            yield b
+        finally:
+            with self._lock:
+                self._held -= b
+
     def charge(self, *arrays) -> int:
         """Record simultaneously-resident key/payload arrays; returns the
-        moment's byte total and updates :attr:`peak_bytes`.  (``nbytes``
-        is read off the array object — numpy or jnp — never via a copy.)
+        moment's byte total and updates :attr:`peak_bytes` (folding in
+        whatever concurrent operations currently hold).  (``nbytes`` is
+        read off the array object — numpy or jnp — never via a copy.)
         Thread-safe: the overlapped spill path charges from worker
         threads, and a lost high-water update would make the asserted
         peak a lie."""
         resident = sum(int(a.nbytes) for a in arrays if a is not None)
         with self._lock:
-            self.peak_bytes = max(self.peak_bytes, resident)
+            self.peak_bytes = max(self.peak_bytes, resident + self._held)
         return resident
 
 
@@ -169,8 +233,29 @@ class PlacementStore:
       device store runs the DistributedBackend pairs path);
     * :meth:`owner` / :meth:`nbytes` — capacity accounting: which
       placement slot (device) a partition maps to, and the store's
-      resident footprint.
+      resident footprint;
+    * :meth:`write_log` / :meth:`read_log` — the store's named log
+      channel (verified on the disk store): the external sort journals
+      its crash-resume partition manifest here, next to the fragments it
+      describes.
+
+    Failure is part of the contract: every boundary raises the typed
+    errors of :mod:`repro.core.faults` (transient / corrupt / permanent)
+    and polls the fault-injection registry, so the chaos suite can drive
+    each path deterministically.
     """
+
+    #: prefix of this store's fault-injection site names
+    #: (``<prefix>.put`` …); subclasses override.
+    site_prefix: str = "store"
+
+    #: whether the external sort may fail this store's remaining
+    #: partitions over to a fresh disk store when a *permanent* fault
+    #: hits mid-sort.  Device placements say True (their fragments keep
+    #: host mirrors, and disk is a sound fallback); the disk store says
+    #: False — when disk itself is permanently gone there is nowhere
+    #: left to degrade to.
+    failover_to_disk: bool = False
 
     #: fragment ids written / read back, in call order (tests assert on
     #: these; the top-k bar is "pruned fragments never even exist").
@@ -190,6 +275,9 @@ class PlacementStore:
     #: fall back to the serial loop.
     supports_batched_sorts: bool = True
 
+    def _site(self, op: str) -> str:
+        return f"{self.site_prefix}.{op}"
+
     def put(self, *arrays: np.ndarray, partition: Optional[int] = None):
         """Store one fragment (≥ 1 equal-length arrays, keys first);
         returns its fragment id.  ``partition`` is the owning partition
@@ -200,6 +288,9 @@ class PlacementStore:
         raise NotImplementedError
 
     def delete(self, rid: int) -> None:
+        raise NotImplementedError
+
+    def __contains__(self, rid: int) -> bool:
         raise NotImplementedError
 
     def owner(self, partition: int, num_partitions: int) -> Optional[int]:
@@ -214,6 +305,23 @@ class PlacementStore:
     def close(self) -> None:
         raise NotImplementedError
 
+    # -- the log channel ------------------------------------------------------
+
+    def write_log(self, name: str, payload: dict) -> None:
+        """Journal a named JSON-serializable record next to the
+        fragments.  The in-memory default round-trips through JSON so
+        every store normalizes types identically; the disk store makes
+        this atomic + CRC-verified (the external sort's resume manifest
+        rides this channel)."""
+        logs = self.__dict__.setdefault("_mem_logs", {})
+        logs[name] = json.loads(json.dumps(payload))
+
+    def read_log(self, name: str) -> Optional[dict]:
+        """The named record, or None if never written."""
+        return self.__dict__.get("_mem_logs", {}).get(name)
+
+    # -- distribution and partition sorts -------------------------------------
+
     def distribute(self, words: np.ndarray, payloads: tuple,
                    pid: np.ndarray, num_partitions: int) -> list:
         """Route one chunk's rows to their partitions, preserving arrival
@@ -224,6 +332,10 @@ class PlacementStore:
         partition; the device store overrides this with one
         ``all_to_all`` placing every row on its partition's owner
         device."""
+        site = self._site("distribute")
+        # the injection point sits before any mutation, so a transient
+        # retry re-enters a clean distribute
+        faults.with_retries(site, lambda: faults.poll(site))
         frag_ids: list = [[] for _ in range(num_partitions)]
         order = np.argsort(pid, kind="stable")  # arrival kept within pid
         pid_sorted = pid[order]
@@ -246,16 +358,25 @@ class PlacementStore:
         later → stably last), so distinct partition lengths share
         O(log budget) jit traces.  ``plans`` pins per-active-word sort
         plans (the external loop hoists one resolution per (length,
-        sort-bits) bucket); None resolves per call.  Returns
+        sort-bits) bucket); None resolves per call.  Transient faults
+        retry the whole (pure, deterministic) sort.  Returns
         ``(sorted_words, payloads in sorted order)``."""
+        m = int(words.shape[0])
+        if m <= 1 or sort_bits == 0:
+            return words, payloads
+        site = self._site("sort_rows")
+        return faults.with_retries(
+            site, lambda: self._sort_rows_once(
+                site, words, payloads, bits, sort_bits, budget, plans))
+
+    def _sort_rows_once(self, site, words, payloads, bits, sort_bits,
+                        budget, plans):
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2
         from repro.query.operators import sort_rowids
 
         m = int(words.shape[0])
-        if m <= 1 or sort_bits == 0:
-            return words, payloads
         target = 1 << ceil_log2(m)
         padded = words
         if target > m:
@@ -263,16 +384,19 @@ class PlacementStore:
                 [words, np.full((target - m, words.shape[1]), 0xFFFFFFFF,
                                 np.uint32)])
         # the sort moment: host padded matrix + its device copy + the
-        # device sorted output are simultaneously alive (charged as 3x)
-        budget.charge(padded, padded, padded, *payloads)
-        sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits,
-                                           plans=plans, low_bits=sort_bits)
-        sorted_words = np.asarray(sorted_words)[:m]
-        rowids = np.asarray(rowids)[:m]
-        # all-ones sentinels sort after every real row, so the first m
-        # sorted slots hold exactly the real rows
-        assert m == target or int(rowids.max(initial=-1)) < m
-        gathered = tuple(np.asarray(p)[rowids] for p in payloads)
+        # device sorted output are simultaneously alive (held as 3x for
+        # the sort's duration — released even if the sort raises)
+        with budget.hold(padded, padded, padded, *payloads):
+            faults.poll(site)
+            sorted_words, rowids = sort_rowids(jnp.asarray(padded), bits,
+                                               plans=plans,
+                                               low_bits=sort_bits)
+            sorted_words = np.asarray(sorted_words)[:m]
+            rowids = np.asarray(rowids)[:m]
+            # all-ones sentinels sort after every real row, so the first m
+            # sorted slots hold exactly the real rows
+            assert m == target or int(rowids.max(initial=-1)) < m
+            gathered = tuple(np.asarray(p)[rowids] for p in payloads)
         budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
         return sorted_words, gathered
 
@@ -296,6 +420,13 @@ class PlacementStore:
                 or sort_bits == 0):
             return [self.sort_rows(w, p, bits, sort_bits, budget,
                                    plans=plans) for w, p in parts]
+        site = self._site("sort_rows")
+        return faults.with_retries(
+            site, lambda: self._sort_rows_batched_once(
+                site, parts, bits, sort_bits, budget, plans))
+
+    def _sort_rows_batched_once(self, site, parts, bits, sort_bits,
+                                budget, plans):
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2
@@ -308,21 +439,22 @@ class PlacementStore:
         for b, (w, _) in enumerate(parts):
             padded[b * L:b * L + w.shape[0]] = w
         all_payloads = [p for _, pays in parts for p in pays]
-        budget.charge(padded, padded, padded, *all_payloads)
-        sorted_words, rowids = sort_rowids_batched(
-            jnp.asarray(padded), bits, seg_log2, plans=plans,
-            low_bits=sort_bits)
-        sorted_words = np.asarray(sorted_words)
-        rowids = np.asarray(rowids)
-        out = []
-        for b, (w, pays) in enumerate(parts):
-            m = int(w.shape[0])
-            sw = sorted_words[b * L:b * L + m]
-            rid = rowids[b * L:b * L + m] - b * L
-            # sentinels sort last per segment: the first m slots of
-            # segment b hold exactly partition b's real rows
-            assert m == L or int(rid.max(initial=-1)) < m
-            out.append((sw, tuple(np.asarray(p)[rid] for p in pays)))
+        with budget.hold(padded, padded, padded, *all_payloads):
+            faults.poll(site)
+            sorted_words, rowids = sort_rowids_batched(
+                jnp.asarray(padded), bits, seg_log2, plans=plans,
+                low_bits=sort_bits)
+            sorted_words = np.asarray(sorted_words)
+            rowids = np.asarray(rowids)
+            out = []
+            for b, (w, pays) in enumerate(parts):
+                m = int(w.shape[0])
+                sw = sorted_words[b * L:b * L + m]
+                rid = rowids[b * L:b * L + m] - b * L
+                # sentinels sort last per segment: the first m slots of
+                # segment b hold exactly partition b's real rows
+                assert m == L or int(rid.max(initial=-1)) < m
+                out.append((sw, tuple(np.asarray(p)[rid] for p in pays)))
         budget.charge(padded, sorted_words, rowids, *all_payloads,
                       *[p for _, g in out for p in g])
         return out
@@ -334,6 +466,28 @@ class PlacementStore:
         self.close()
 
 
+def _crc_file(path: str) -> int:
+    """CRC32 of a file's bytes, streamed in bounded blocks (never loads
+    the file whole — verification must not break the memory budget)."""
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(1 << 20)
+            if not block:
+                return crc
+            crc = zlib.crc32(block, crc)
+
+
+def _corrupt_file(path: str) -> None:
+    """Flip the last byte in place — the injection registry's stand-in
+    for a torn write / bit rot.  Verification must catch it."""
+    with open(path, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
 class RunStore(PlacementStore):
     """Numpy-backed on-disk store of runs (each a tuple of arrays).
 
@@ -343,10 +497,32 @@ class RunStore(PlacementStore):
     on :meth:`close`).  ``get(..., mmap=True)`` returns memory-maps, which
     is how the k-way merge keeps k open runs resident only block by block.
 
+    Durability contract: :meth:`put` stages each array to a tmp file and
+    ``os.replace``\\ s it into place (a reader never sees a half-written
+    array), then commits the run by atomically writing its *meta record*
+    (``run<id>.meta.json``: array count + per-array CRC32) — a run
+    without its meta record does not exist.  :meth:`get` re-reads every
+    array's bytes against the recorded CRC and raises
+    :class:`~repro.core.faults.CorruptFragmentError` on mismatch, so torn
+    or rotted spill bytes can never silently reach sorted output.
+    Transient I/O failures retry with bounded backoff
+    (``REPRO_STORE_RETRIES``); swallowed/retried events are counted in
+    :attr:`events`.
+
+    A store constructed on a caller-provided ``root`` *recovers* on
+    construction: committed runs (meta record present) come back, torn
+    leftovers (data without meta, stray tmp files) are swept and counted
+    — this is the reopen path the external sort's kill-and-resume
+    manifest relies on.  Slice fragments (chunk-level spill views) are
+    persisted to the ``slices`` log on every mutation for the same
+    reason.
+
     Every access is logged (:attr:`put_log` / :attr:`get_log`) so tests
     can assert what was — and crucially, what was *never* — loaded (the
     ``top_k`` partition-pruning bar).
     """
+
+    site_prefix = "run_store"
 
     def __init__(self, root: Optional[str] = None):
         self._own_root = root is None
@@ -355,6 +531,7 @@ class RunStore(PlacementStore):
         self._next_id = 0
         self._id_lock = threading.Lock()  # overlapped workers also spill
         self._widths: dict = {}  # run id -> number of arrays
+        self._crcs: dict = {}    # run id -> tuple of per-array CRC32
         # virtual slice fragments: slice id -> (base run id, lo, hi); a
         # base run holding live slices is refcounted and deleted when the
         # last slice goes (chunk-level spill: distribute writes ONE
@@ -363,58 +540,206 @@ class RunStore(PlacementStore):
         self._base_refs: dict = {}
         self.put_log: list = []
         self.get_log: list = []
+        #: counters of swallowed / retried / recovered I/O events — the
+        #: "route, don't silently drop" ledger (e.g. ``put.retry``,
+        #: ``delete.missing``, ``recover.torn_run``)
+        self.events: collections.Counter = collections.Counter()
         if self._own_root:  # a private temp dir never outlives the store
             self._cleanup = weakref.finalize(
                 self, shutil.rmtree, self.root, True)
+        else:
+            self._recover()
+
+    # -- recovery (caller-provided roots) -------------------------------------
+
+    def _recover(self) -> None:
+        """Rebuild committed state from an existing root: runs with meta
+        records are live; data files without one are a torn put and are
+        swept (counted).  The persisted ``slices`` log restores slice
+        fragments and the id watermark."""
+        metas, data_files = {}, {}
+        for name in os.listdir(self.root):
+            path = os.path.join(self.root, name)
+            if name.endswith(".tmp"):
+                os.remove(path)
+                self.events["recover.tmp_swept"] += 1
+            elif name.endswith(".meta.json"):
+                try:
+                    rid = int(name[len("run"):-len(".meta.json")])
+                    with open(path) as f:
+                        metas[rid] = json.load(f)
+                except (ValueError, OSError):
+                    self.events["recover.torn_meta"] += 1
+                    os.remove(path)
+            elif name.startswith("run") and name.endswith(".npy"):
+                try:
+                    rid = int(name[len("run"):].split("_")[0])
+                    data_files.setdefault(rid, []).append(path)
+                except ValueError:
+                    pass
+        for rid, meta in metas.items():
+            self._widths[rid] = int(meta["width"])
+            self._crcs[rid] = tuple(int(c) for c in meta["crc32"])
+        for rid, paths in data_files.items():
+            if rid not in self._widths:  # data without a commit record
+                for p in paths:
+                    os.remove(p)
+                self.events["recover.torn_run"] += 1
+        slices = self.read_log("slices")
+        if slices is not None:
+            self._slices = {int(k): tuple(v)
+                            for k, v in slices["slices"].items()}
+            self._base_refs = {int(k): int(v)
+                               for k, v in slices["base_refs"].items()}
+            self._next_id = int(slices["next_id"])
+        ids = list(self._widths) + list(self._slices)
+        self._next_id = max([self._next_id] + [i + 1 for i in ids])
+
+    def _persist_slices(self) -> None:
+        """Journal the slice table (callers with durable roots only —
+        a private temp root dies with the process anyway)."""
+        if self._own_root:
+            return
+        self.write_log("slices", {
+            "next_id": self._next_id,
+            "slices": {str(k): list(v) for k, v in self._slices.items()},
+            "base_refs": {str(k): int(v)
+                          for k, v in self._base_refs.items()},
+        })
+
+    # -- fragment put/get ------------------------------------------------------
 
     def put(self, *arrays: np.ndarray,
             partition: Optional[int] = None) -> int:
         """Spill one run (≥ 1 arrays); returns its run id.  ``partition``
         (the owning partition, when the caller knows it) is irrelevant on
-        disk — one placement — and accepted for protocol compatibility."""
+        disk — one placement — and accepted for protocol compatibility.
+        Atomic: every array stages to a tmp file and ``os.replace``\\ s
+        into place, and the run only exists once its meta record (array
+        count + CRC32s) lands — a crash mid-put leaves a torn run the
+        reopen sweep discards, never a half-readable one."""
         assert arrays, "a run holds at least one array"
         with self._id_lock:
             rid = self._next_id
             self._next_id += 1
-        for j, a in enumerate(arrays):
-            np.save(self._path(rid, j), np.ascontiguousarray(a),
-                    allow_pickle=False)
+
+        def attempt():
+            kind = faults.poll(_SITE_PUT)
+            crcs = []
+            for j, a in enumerate(arrays):
+                buf = io.BytesIO()
+                np.save(buf, np.ascontiguousarray(a), allow_pickle=False)
+                data = buf.getvalue()
+                crcs.append(zlib.crc32(data))
+                path = self._path(rid, j)
+                tmp = path + ".tmp"
+                with open(tmp, "wb") as f:
+                    f.write(data)
+                os.replace(tmp, path)
+            self._write_json_atomic(self._meta_path(rid), {
+                "width": len(arrays), "crc32": crcs})
+            if kind == "corrupt":
+                # a torn write the commit record doesn't know about —
+                # get's CRC verification must catch it
+                _corrupt_file(self._path(rid, len(arrays) - 1))
+            return tuple(crcs)
+
+        crcs = faults.with_retries(
+            _SITE_PUT, attempt,
+            on_retry=lambda: self._count("put.retry"))
         self._widths[rid] = len(arrays)
+        self._crcs[rid] = crcs
         self.put_log.append(rid)
         return rid
 
     def get(self, rid: int, mmap: bool = False):
         """Load one run back as a tuple of arrays (memory-maps with
         ``mmap=True`` — resident page by page, the merge path's trick).
-        A slice fragment reads its row range off the memory-mapped base
-        run — only that range's pages, never the sibling partitions'."""
+        Every array's on-disk bytes verify against the CRC recorded at
+        put (streamed, so verification itself stays in budget);
+        a mismatch raises :class:`~repro.core.faults.
+        CorruptFragmentError` — spill corruption is *detected*, never
+        consumed.  A slice fragment verifies its base run, then reads
+        its row range off the memory-map — only that range's pages are
+        ever resident."""
         if rid in self._slices:
             base, lo, hi = self._slices[rid]
             self.get_log.append(rid)
-            return tuple(
-                np.load(self._path(base, j), mmap_mode="r",
-                        allow_pickle=False)[lo:hi]
-                for j in range(self._widths[base]))
+
+            def attempt_slice():
+                kind = faults.poll(_SITE_GET)
+                if kind == "corrupt":
+                    _corrupt_file(self._path(base, 0))
+                self._verify(base)
+                return tuple(
+                    np.load(self._path(base, j), mmap_mode="r",
+                            allow_pickle=False)[lo:hi]
+                    for j in range(self._widths[base]))
+
+            return faults.with_retries(
+                _SITE_GET, attempt_slice,
+                on_retry=lambda: self._count("get.retry"))
         assert rid in self._widths, f"no run {rid} in store"
         self.get_log.append(rid)
-        mode = "r" if mmap else None
-        return tuple(
-            np.load(self._path(rid, j), mmap_mode=mode, allow_pickle=False)
-            for j in range(self._widths[rid]))
+
+        def attempt():
+            kind = faults.poll(_SITE_GET)
+            if kind == "corrupt":
+                _corrupt_file(self._path(rid, self._widths[rid] - 1))
+            self._verify(rid)
+            mode = "r" if mmap else None
+            return tuple(
+                np.load(self._path(rid, j), mmap_mode=mode,
+                        allow_pickle=False)
+                for j in range(self._widths[rid]))
+
+        return faults.with_retries(
+            _SITE_GET, attempt, on_retry=lambda: self._count("get.retry"))
+
+    def _verify(self, rid: int) -> None:
+        for j, crc in enumerate(self._crcs.get(rid, ())):
+            path = self._path(rid, j)
+            got = _crc_file(path)
+            if got != crc:
+                raise CorruptFragmentError(
+                    _SITE_GET,
+                    f"run {rid} array {j}: CRC32 {got:#010x} != recorded "
+                    f"{crc:#010x} ({path})")
 
     def delete(self, rid: int) -> None:
+        """Drop one run or slice.  A file already missing is swallowed —
+        but *counted* (``delete.missing``), never silently dropped on the
+        floor; transient removal failures retry, anything else surfaces
+        as the typed permanent error."""
         if rid in self._slices:
             base, _, _ = self._slices.pop(rid)
             self._base_refs[base] -= 1
-            if self._base_refs[base] == 0:  # last slice: drop the base run
+            last = self._base_refs[base] == 0
+            if last:  # last slice: drop the base run
                 del self._base_refs[base]
+            self._persist_slices()
+            if last:
                 self.delete(base)
             return
-        for j in range(self._widths.pop(rid)):
+        width = self._widths[rid]
+
+        def attempt():
+            faults.poll(_SITE_DELETE)
+            for j in range(width):
+                try:
+                    os.remove(self._path(rid, j))
+                except FileNotFoundError:
+                    self._count("delete.missing")
             try:
-                os.remove(self._path(rid, j))
-            except OSError:
-                pass
+                os.remove(self._meta_path(rid))
+            except FileNotFoundError:
+                self._count("delete.missing")
+
+        faults.with_retries(
+            _SITE_DELETE, attempt,
+            on_retry=lambda: self._count("delete.retry"))
+        self._widths.pop(rid)
+        self._crcs.pop(rid, None)
 
     def distribute(self, words: np.ndarray, payloads: tuple,
                    pid: np.ndarray, num_partitions: int) -> list:
@@ -423,7 +748,13 @@ class RunStore(PlacementStore):
         O(chunks) ``.npy`` files instead of O(chunks × partitions), the
         same bytes.  Rows with ``pid < 0`` (pruned partitions) never reach
         disk; slice reads memory-map only their own range, and the base
-        run is deleted when its last slice is."""
+        run is deleted when its last slice is.  The injection point sits
+        before any mutation (the base-run spill itself retries inside
+        :meth:`put`), so a transient distribute retry is clean."""
+        site = _SITE_DISTRIBUTE
+        faults.with_retries(
+            site, lambda: faults.poll(site),
+            on_retry=lambda: self._count("distribute.retry"))
         frag_ids: list = [[] for _ in range(num_partitions)]
         order = np.argsort(pid, kind="stable")  # arrival kept within pid
         pid_sorted = pid[order]
@@ -444,32 +775,97 @@ class RunStore(PlacementStore):
                 self.put_log.append(sid)
                 frag_ids[i].append(sid)
         self._base_refs[base] = refs
+        self._persist_slices()
         return frag_ids
+
+    # -- the log channel -------------------------------------------------------
+
+    def write_log(self, name: str, payload: dict) -> None:
+        """Atomically journal a named JSON record (tmp + ``os.replace``)
+        with a CRC32 over the canonical payload encoding — the resume
+        manifest must be as tamper-evident as the fragments it indexes."""
+        data = json.dumps(payload, sort_keys=True).encode()
+        rec = {"crc32": zlib.crc32(data), "payload": payload}
+
+        def attempt():
+            faults.poll(_SITE_PUT)
+            self._write_json_atomic(self._log_path(name), rec)
+
+        faults.with_retries(
+            _SITE_PUT, attempt, on_retry=lambda: self._count("log.retry"))
+
+    def read_log(self, name: str) -> Optional[dict]:
+        path = self._log_path(name)
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except FileNotFoundError:
+            return None
+        except (OSError, ValueError) as e:
+            raise CorruptFragmentError(
+                _SITE_GET, f"log {name!r} unreadable: {e}") from e
+        payload = rec.get("payload")
+        data = json.dumps(payload, sort_keys=True).encode()
+        if zlib.crc32(data) != rec.get("crc32"):
+            raise CorruptFragmentError(
+                _SITE_GET, f"log {name!r}: CRC mismatch ({path})")
+        return payload
+
+    # -- accounting ------------------------------------------------------------
 
     def run_ids(self) -> tuple:
         return tuple(sorted(self._widths))
 
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._widths or rid in self._slices
+
     def nbytes(self) -> int:
-        """Total on-disk footprint of live runs."""
-        total = 0
-        for rid, width in self._widths.items():
-            for j in range(width):
-                try:
-                    total += os.path.getsize(self._path(rid, j))
-                except OSError:
-                    pass
-        return total
+        """Total on-disk footprint of live runs.  A missing file is
+        counted (``nbytes.missing``) and skipped; any other failure
+        surfaces typed (transient retried) — size accounting must not
+        silently under-report."""
+
+        def attempt():
+            total = 0
+            for rid, width in self._widths.items():
+                for j in range(width):
+                    try:
+                        total += os.path.getsize(self._path(rid, j))
+                    except FileNotFoundError:
+                        self._count("nbytes.missing")
+            return total
+
+        return faults.with_retries(
+            "run_store.nbytes", attempt,
+            on_retry=lambda: self._count("nbytes.retry"))
 
     def close(self) -> None:
         """Drop every run (and the store dir, if this store created it)."""
         self._widths.clear()
+        self._crcs.clear()
         self._slices.clear()
         self._base_refs.clear()
         if self._own_root:
             self._cleanup()
 
+    def _count(self, event: str) -> None:
+        self.events[event] += 1
+
+    def _write_json_atomic(self, path: str, payload: dict) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+
     def _path(self, rid: int, j: int) -> str:
         return os.path.join(self.root, f"run{rid:08d}_{j}.npy")
+
+    def _meta_path(self, rid: int) -> str:
+        return os.path.join(self.root, f"run{rid:08d}.meta.json")
+
+    def _log_path(self, name: str) -> str:
+        assert name.replace("-", "").replace("_", "").isalnum(), name
+        return os.path.join(self.root, f"{name}.log.json")
 
     def __len__(self) -> int:
         return len(self._widths)

@@ -37,16 +37,41 @@ power-of-two padded chunks shard evenly.
 
 from __future__ import annotations
 
+import zlib
 from typing import Optional
 
 import numpy as np
 
+from repro.core import faults
+from repro.core.faults import CorruptFragmentError, StorePermanentError
 from repro.stream.chunks import MemoryBudget, PlacementStore
 
 __all__ = ["DeviceShardStore"]
 
 #: padding sentinel rows (all-ones words sort stably after every real row)
 _SENTINEL = np.uint32(0xFFFFFFFF)
+
+# the device store's injection sites (chaos-matrix enumerable)
+_SITE_PUT = faults.register_site("device_store.put")
+_SITE_GET = faults.register_site("device_store.get")
+_SITE_DELETE = faults.register_site("device_store.delete")
+_SITE_DISTRIBUTE = faults.register_site("device_store.distribute")
+_SITE_SORT = faults.register_site("device_store.sort_rows")
+
+
+def _array_crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def _flip_byte(a: np.ndarray) -> np.ndarray:
+    """A copy with its last byte flipped — the injection registry's
+    stand-in for a corrupted host mirror; CRC verification must catch
+    it.  (An empty array has no byte to damage and passes through.)"""
+    if a.nbytes == 0:
+        return a
+    b = np.ascontiguousarray(a).copy()
+    b.reshape(-1).view(np.uint8)[-1] ^= 0xFF
+    return b
 
 
 class DeviceShardStore(PlacementStore):
@@ -70,6 +95,14 @@ class DeviceShardStore(PlacementStore):
     #: back to the serial per-partition loop here.
     supports_batched_sorts = False
 
+    site_prefix = "device_store"
+
+    #: fragments keep host mirrors, so when the mesh dies permanently
+    #: mid-sort the external loop can migrate the remaining partitions to
+    #: a disk store and finish bit-exact — graceful degradation instead
+    #: of lost work.
+    failover_to_disk = True
+
     def __init__(self, mesh=None, axis: str = "shards", batch: int = 1024,
                  max_bins_log2: int = 16):
         import jax
@@ -89,6 +122,7 @@ class DeviceShardStore(PlacementStore):
             "power-of-two padded chunks shard evenly")
         self._next_id = 0
         self._frags: dict = {}       # rid -> tuple of host arrays
+        self._crcs: dict = {}        # rid -> per-array CRC32 at put time
         self._frag_dev: dict = {}    # rid -> landing device (None: direct put)
         self.put_log: list = []
         self.get_log: list = []
@@ -122,11 +156,24 @@ class DeviceShardStore(PlacementStore):
             partition: Optional[int] = None) -> int:
         """Store one fragment; the landing device is recorded by
         :meth:`distribute` (which placed the rows) — direct puts (result
-        runs, interop) have no device."""
+        runs, interop) have no device.  The host mirrors carry per-array
+        CRC32s so :meth:`get` detects a damaged mirror just like the disk
+        store detects a torn spill."""
         assert arrays, "a fragment holds at least one array"
         rid = self._next_id
         self._next_id += 1
-        self._frags[rid] = tuple(np.ascontiguousarray(a) for a in arrays)
+
+        def attempt():
+            kind = faults.poll(_SITE_PUT)
+            held = tuple(np.ascontiguousarray(a) for a in arrays)
+            crcs = tuple(_array_crc(a) for a in held)
+            if kind == "corrupt":  # CRCs record the intended bytes
+                held = held[:-1] + (_flip_byte(held[-1]),)
+            return held, crcs
+
+        held, crcs = faults.with_retries(_SITE_PUT, attempt)
+        self._frags[rid] = held
+        self._crcs[rid] = crcs
         self._frag_dev[rid] = None
         self.put_log.append(rid)
         return rid
@@ -134,17 +181,40 @@ class DeviceShardStore(PlacementStore):
     def get(self, rid: int, mmap: bool = False):
         assert rid in self._frags, f"no fragment {rid} in store"
         self.get_log.append(rid)
-        return self._frags[rid]
+
+        def attempt():
+            kind = faults.poll(_SITE_GET)
+            if kind == "corrupt":
+                arrays = self._frags[rid]
+                self._frags[rid] = arrays[:-1] + (_flip_byte(arrays[-1]),)
+            arrays = self._frags[rid]
+            for j, crc in enumerate(self._crcs.get(rid, ())):
+                got = _array_crc(arrays[j])
+                if got != crc:
+                    raise CorruptFragmentError(
+                        _SITE_GET,
+                        f"fragment {rid} array {j}: CRC32 {got:#010x} != "
+                        f"recorded {crc:#010x}")
+            return arrays
+
+        return faults.with_retries(_SITE_GET, attempt)
 
     def delete(self, rid: int) -> None:
+        faults.with_retries(
+            _SITE_DELETE, lambda: faults.poll(_SITE_DELETE))
         self._frags.pop(rid)
+        self._crcs.pop(rid, None)
         self._frag_dev.pop(rid, None)
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._frags
 
     def run_ids(self) -> tuple:
         return tuple(sorted(self._frags))
 
     def close(self) -> None:
         self._frags.clear()
+        self._crcs.clear()
         self._frag_dev.clear()
 
     def fragment_device(self, rid: int) -> Optional[int]:
@@ -182,6 +252,11 @@ class DeviceShardStore(PlacementStore):
         frag_ids: list = [[] for _ in range(num_partitions)]
         if n == 0:
             return frag_ids
+        # the injection point sits before the collective fires, so a
+        # transient retry re-enters a clean distribute (the per-fragment
+        # puts retry inside put itself)
+        faults.with_retries(
+            _SITE_DISTRIBUTE, lambda: faults.poll(_SITE_DISTRIBUTE))
         owner_lut = np.asarray(
             [self.owner(i, num_partitions) for i in range(num_partitions)],
             np.int32)
@@ -212,9 +287,11 @@ class DeviceShardStore(PlacementStore):
             w_d = lw[d * t:(d + 1) * t][valid]
             # the wire must have carried exactly the rows it was asked to
             # place, in arrival order — the device data IS the fragment
-            assert np.array_equal(w_d, words[tags]), (
-                "fragment placement parity violation: landed words differ "
-                "from the chunk rows addressed to this device")
+            if not np.array_equal(w_d, words[tags]):
+                raise CorruptFragmentError(
+                    _SITE_DISTRIBUTE,
+                    "fragment placement parity violation: landed words "
+                    "differ from the chunk rows addressed to this device")
             pids_d = pid[tags]
             for i in np.unique(pids_d):
                 sel = pids_d == i
@@ -252,14 +329,20 @@ class DeviceShardStore(PlacementStore):
         external loop's hoisted local plans) is accepted for protocol
         compatibility and ignored: the distributed program fixes its own
         wide per-word passes (``max_bins_log2``)."""
+        m = int(words.shape[0])
+        if m <= 1 or sort_bits == 0:
+            return words, payloads
+        return faults.with_retries(
+            _SITE_SORT, lambda: self._sort_rows_once(
+                words, payloads, bits, sort_bits, budget))
+
+    def _sort_rows_once(self, words, payloads, bits, sort_bits, budget):
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2
         from repro.query.codec import word_widths
 
         m = int(words.shape[0])
-        if m <= 1 or sort_bits == 0:
-            return words, payloads
         widths = word_widths(bits)
         # word j covers code bits [lo_j, lo_j + widths[j]); only bits
         # below sort_bits are undetermined (same walk as sort_rowids).
@@ -284,21 +367,28 @@ class DeviceShardStore(PlacementStore):
                 [words, np.full((t - m, words.shape[1]), _SENTINEL,
                                 np.uint32)])
         # the sort moment mirrors the disk path's charge model: host
-        # padded matrix + device copy + device sorted output
-        budget.charge(padded, padded, padded, *payloads)
-        wdev = jnp.asarray(padded)
-        perm = jnp.arange(t, dtype=jnp.int32)
-        for j, eff in reversed(active):
-            col = wdev[:, j][perm]  # gather under the chain's current perm
-            _, perm, overflow = self._sorter(eff)(col, perm)
-            assert not bool(overflow), (
-                "distributed partition sort overflowed its all_to_all "
-                "buckets despite worst-case capacity")
-        rowids = np.asarray(perm)[:m]
-        # all-ones sentinels sort after every real row (stability: they
-        # also arrive after), so the first m slots hold the real rows
-        assert m == t or int(rowids.max(initial=-1)) < m
-        sorted_words = padded[rowids]
-        gathered = tuple(np.asarray(p)[rowids] for p in payloads)
+        # padded matrix + device copy + device sorted output — held for
+        # the sort's duration so a mid-collective failure releases it
+        with budget.hold(padded, padded, padded, *payloads):
+            faults.poll(_SITE_SORT)
+            wdev = jnp.asarray(padded)
+            perm = jnp.arange(t, dtype=jnp.int32)
+            for j, eff in reversed(active):
+                col = wdev[:, j][perm]  # gather under the current perm
+                _, perm, overflow = self._sorter(eff)(col, perm)
+                if bool(overflow):
+                    # worst-case capacity was provisioned; overflowing it
+                    # means the collective itself misbehaved — retrying
+                    # the same program is futile
+                    raise StorePermanentError(
+                        _SITE_SORT,
+                        "distributed partition sort overflowed its "
+                        "all_to_all buckets despite worst-case capacity")
+            rowids = np.asarray(perm)[:m]
+            # all-ones sentinels sort after every real row (stability:
+            # they also arrive after), so the first m slots are real rows
+            assert m == t or int(rowids.max(initial=-1)) < m
+            sorted_words = padded[rowids]
+            gathered = tuple(np.asarray(p)[rowids] for p in payloads)
         budget.charge(padded, sorted_words, rowids, *payloads, *gathered)
         return sorted_words, gathered

@@ -44,6 +44,24 @@ digit: the sort **recursively re-partitions** it on the next field down —
 the skew fallback — terminating at fully-equal keys, which stream out in
 arrival order (trivially sorted, stability free).
 
+Fault tolerance rides the same placement seam:
+
+* **resumable manifests** (``journal=``/``resume=``) — the loop journals
+  its progress (histogram snapshot, fragment ids, per-partition done
+  run ids) through the store's verified log channel; after a crash,
+  ``resume=`` replays completed partitions from their spilled result
+  runs and recomputes **zero** of them — bit-identical to an
+  uninterrupted run (requires a store on a durable root);
+* **graceful degradation** — a store whose partition sort dies with a
+  :class:`~repro.core.faults.StorePermanentError` and advertises
+  ``failover_to_disk`` (the device store: its fragments keep host
+  mirrors) has its remaining fragments migrated to a fresh disk store
+  via :func:`~repro.stream.chunks.temp_store`, and emission continues
+  bit-exact;
+* **prompt failure** — a worker-pool partition sort that raises cancels
+  every pending lookahead future and surfaces immediately; the pool
+  never hangs emission on doomed work.
+
 Everything here operates on ``(n, W)`` uint32 code-word matrices (the
 query codec layout), so one core serves plain ≤ 32-bit keys
 (:func:`external_sort` / :func:`external_argsort`) and the StreamTable
@@ -59,6 +77,7 @@ from typing import Callable, Iterator, Optional, Tuple
 import numpy as np
 
 from repro.core.executor import PlanExecutor
+from repro.core.faults import StoreError, StorePermanentError
 from repro.core.fractal_tree import ceil_log2
 from repro.core.sort_plan import DigitPass, quantize_sort_bits
 from repro.query.codec import word_widths
@@ -152,6 +171,8 @@ def stream_sorted_words(
     executor: Optional[PlanExecutor] = None,
     partition_bits: int = DEFAULT_PARTITION_BITS,
     limit_rows: Optional[int] = None,
+    journal: Optional[str] = None,
+    resume=None,
 ) -> Iterator[Tuple[np.ndarray, tuple]]:
     """The recursive external-sort core over ``(words, payloads)`` chunks.
 
@@ -173,9 +194,32 @@ def stream_sorted_words(
     of the distribution pass*: partitions the histogram proves past the
     limit are never placed, let alone loaded — the top-k path (on a
     device store, pruned partitions' owner devices receive nothing).
+
+    ``journal`` names a manifest on the store's log channel that this
+    call keeps current: histogram snapshot once counted, fragment ids
+    once distributed, and each partition's spilled result-run ids the
+    moment it completes — so a crash at any partition boundary leaves a
+    resumable record next to the fragments it indexes.  ``resume`` is a
+    prior run's manifest (the dict, or its journal name to read from the
+    store); completed partitions replay from their result runs with zero
+    recomputation and the rest proceed normally, so the concatenated
+    output is bit-identical to the uninterrupted run.  Both require a
+    store on a durable root and the same budget, and neither composes
+    with ``limit_rows`` (a pruned sort re-plans under a new limit).
     """
     hi = bits if hi is None else hi
     emitted = 0
+    if journal is not None or resume is not None:
+        assert limit_rows is None, \
+            "journal/resume do not compose with limit_rows"
+    manifest = None
+    if resume is not None:
+        manifest = store.read_log(resume) if isinstance(resume, str) \
+            else resume
+        if isinstance(resume, str) and journal is None:
+            journal = resume  # keep journaling where we resumed from
+        if manifest is not None and manifest.get("complete"):
+            manifest = None  # finished runs have nothing to replay
 
     def room() -> Optional[int]:
         return None if limit_rows is None else max(limit_rows - emitted, 0)
@@ -210,10 +254,37 @@ def stream_sorted_words(
             budget.charge(words, *payloads)
             yield _extract_field(words, bits, hi - w, w)
 
-    counts, n_total = streamed_field_counts(field_chunks(), dp, executor)
-    if n_total == 0:
-        return
-    budget_rows = budget.rows(row_bytes)
+    if manifest is not None:
+        # resume: the histogram pass already ran and was journaled; the
+        # partition plan must re-derive identically (deterministic from
+        # counts + budget), so the shape invariants are asserted
+        assert (manifest["bits"] == bits and manifest["hi"] == hi
+                and manifest["w"] == w), "resume manifest shape mismatch"
+        counts = np.asarray(manifest["counts"], np.int64)
+        n_total = int(manifest["n_total"])
+        n_payloads = int(manifest["n_payloads"])
+        budget_rows = budget.rows(row_bytes)
+        assert budget_rows == int(manifest["budget_rows"]), (
+            "resume requires the same memory budget (the partition plan "
+            "derives from it)")
+    else:
+        counts, n_total = streamed_field_counts(field_chunks(), dp,
+                                                executor)
+        if n_total == 0:
+            return
+        budget_rows = budget.rows(row_bytes)
+        if journal is not None:
+            manifest = {
+                "version": 1, "bits": bits, "hi": hi, "w": w,
+                "budget_rows": budget_rows, "n_total": n_total,
+                "n_payloads": n_payloads,
+                "counts": [int(c) for c in counts],
+                "done": {}, "complete": False,
+            }
+            store.write_log(journal, manifest)
+    if manifest is None:
+        manifest = {"done": {}}  # uniform access below; never journaled
+    done: dict = dict(manifest.get("done", {}))
 
     if n_total <= budget_rows:
         # the data fit after all: one in-memory sort, no placement pass
@@ -225,6 +296,9 @@ def stream_sorted_words(
         words, payloads = clip(words, payloads)
         if words.shape[0]:
             yield words, payloads
+        if journal is not None:
+            manifest["complete"] = True
+            store.write_log(journal, manifest)
         return
 
     partitions = list(partition_bins(counts, budget_rows))
@@ -239,15 +313,28 @@ def stream_sorted_words(
     lut = bin_to_partition(tuple(partitions), 1 << w)
 
     # distribution pass: the store places every row at its partition's
-    # fragments (disk spill / device all_to_all — same call)
-    frag_ids: list = [[] for _ in partitions]
-    for words, payloads in chunks_fn():
-        budget.charge(words, *payloads)
-        digit = _extract_field(words, bits, hi - w, w).astype(np.int64)
-        pid = lut[digit]
-        for i, ids in enumerate(
-                store.distribute(words, payloads, pid, len(partitions))):
-            frag_ids[i].extend(ids)
+    # fragments (disk spill / device all_to_all — same call).  A resumed
+    # run whose manifest reached this phase reuses the recovered
+    # fragments instead (a crash *mid*-distribution resumes from the
+    # histogram and redistributes; the torn pass's orphans are never
+    # referenced).
+    if manifest.get("frag_ids") is not None:
+        frag_ids = [list(ids) for ids in manifest["frag_ids"]]
+        assert len(frag_ids) == len(partitions), "resume manifest mismatch"
+    else:
+        frag_ids = [[] for _ in partitions]
+        for words, payloads in chunks_fn():
+            budget.charge(words, *payloads)
+            digit = _extract_field(words, bits, hi - w, w).astype(np.int64)
+            pid = lut[digit]
+            for i, ids in enumerate(
+                    store.distribute(words, payloads, pid,
+                                     len(partitions))):
+                frag_ids[i].extend(ids)
+        if journal is not None:
+            manifest["frag_ids"] = [
+                [int(r) for r in ids] for ids in frag_ids]
+            store.write_log(journal, manifest)
 
     # per-call plan hoisting: tuned plans resolve ONCE per (padded
     # length, sort-bits) bucket, not once per partition — the autotune
@@ -274,14 +361,48 @@ def stream_sorted_words(
         sort_bits = quantize_sort_bits(hi - part.shared_field_bits(w), bits)
         return L, sort_bits
 
+    # `st` is the store partitions currently sort/emit through; it starts
+    # as the caller's placement and swaps to a disk fallback if that
+    # placement dies permanently mid-sort (failover below).  Fragments,
+    # spilled batch members, and deletions all follow it.
+    st = store
+    fallback: Optional[PlacementStore] = None
+
     def sorted_partition(part, frags):
-        words, payloads = _load_fragments(store, frags, n_payloads, budget)
+        words, payloads = _load_fragments(st, frags, n_payloads, budget)
         # the partition's bin range pins the top shared_field_bits of its
         # field: only the code bits below stay undetermined, so the sort
         # narrows to them (a single-bin partition drops the whole field)
         L, sort_bits = part_bucket(part)
-        return store.sort_rows(words, payloads, bits, sort_bits, budget,
-                               plans=plans_for(L, sort_bits))
+        return st.sort_rows(words, payloads, bits, sort_bits, budget,
+                            plans=plans_for(L, sort_bits))
+
+    def fail_over(from_idx):
+        """Migrate every not-yet-emitted fragment to a fresh disk store
+        and swap ``st`` — graceful degradation when a placement's sort
+        is permanently gone but its fragments (host mirrors) are not.
+        Output stays bit-exact: fragments move whole, in order."""
+        nonlocal st, fallback
+        fb = temp_store()
+        for j in range(from_idx, len(items)):
+            pj, fj = items[j]
+            moved = []
+            for rid in fj:
+                arrays = st.get(rid)
+                moved.append(fb.put(arrays[0], *arrays[1:]))
+                try:
+                    st.delete(rid)
+                except StoreError:
+                    pass  # the dying store's cleanup is best-effort
+            items[j] = (pj, moved)
+        for i, rid in list(presorted.items()):
+            arrays = st.get(rid)
+            presorted[i] = fb.put(arrays[0], *arrays[1:])
+            try:
+                st.delete(rid)
+            except StoreError:
+                pass
+        st = fallback = fb
 
     # sort-and-emit, partition (= key range) order.  With workers > 1 a
     # lookahead pool loads+sorts upcoming in-budget partitions while the
@@ -313,7 +434,8 @@ def stream_sorted_words(
     # worker pool (the pool already pipelines), and on stores whose
     # sorts can't concatenate.
     group_of: dict = {}      # head index -> member indices, partition order
-    if pool is None and limit_rows is None and store.supports_batched_sorts:
+    if (pool is None and limit_rows is None and journal is None
+            and not done and store.supports_batched_sorts):
         open_heads: dict = {}  # bucket -> open group's head index
         for i, (part, _) in enumerate(items):
             if part.oversized(budget_rows):
@@ -330,16 +452,41 @@ def stream_sorted_words(
                 group_of[i] = [i]
         group_of = {h: g for h, g in group_of.items() if len(g) > 1}
     presorted: dict = {}     # member index -> spilled pre-sorted fragment
+
+    def journal_done(idx, rids):
+        """Record partition ``idx`` complete (its sorted output spilled
+        as ``rids``) — the crash-resume commit point."""
+        done[str(idx)] = [int(r) for r in rids]
+        manifest["done"] = done
+        store.write_log(journal, manifest)
+
     try:
         for idx in range(len(items)):
             part, frags = items[idx]
+            if str(idx) in done:
+                # a previous (crashed) run completed this partition and
+                # spilled its sorted output: replay the result runs —
+                # zero rows re-sorted, bit-identical emission
+                for rid in done[str(idx)]:
+                    arrays = store.get(rid)
+                    words, payloads = arrays[0], tuple(arrays[1:])
+                    budget.charge(words, *payloads)
+                    if words.shape[0]:
+                        yield words, payloads
+                        emitted += int(words.shape[0])
+                for rid in frags:
+                    # fragments a crash left behind between the commit
+                    # point and their deletion
+                    if rid in store:
+                        store.delete(rid)
+                continue
             if idx in group_of:
                 entries = [items[i] for i in group_of[idx]]
                 L, sort_bits = part_bucket(part)
                 loaded = [
-                    _load_fragments(store, fr, n_payloads, budget)
+                    _load_fragments(st, fr, n_payloads, budget)
                     for _, fr in entries]
-                results = store.sort_rows_batched(
+                results = st.sort_rows_batched(
                     loaded, bits, sort_bits, budget,
                     plans=plans_for(L, sort_bits))
                 # head emits now; later members spill back pre-sorted and
@@ -347,9 +494,9 @@ def stream_sorted_words(
                 for i, (_, fr), (words, payloads) in zip(
                         group_of[idx], entries, results):
                     if i != idx:
-                        presorted[i] = store.put(words, *payloads)
+                        presorted[i] = st.put(words, *payloads)
                     for rid in fr:
-                        store.delete(rid)
+                        st.delete(rid)
                 words, payloads = results[0]
                 if words.shape[0]:
                     yield words, payloads
@@ -357,30 +504,51 @@ def stream_sorted_words(
                 continue
             if idx in presorted:
                 rid = presorted.pop(idx)
-                arrays = store.get(rid)
+                arrays = st.get(rid)
                 words, payloads = arrays[0], tuple(arrays[1:])
                 budget.charge(words, *payloads)
                 if words.shape[0]:
                     yield words, payloads
                     emitted += int(words.shape[0])
-                store.delete(rid)
+                st.delete(rid)
                 continue
             if room() == 0:
                 for rid in frags:
-                    store.delete(rid)
+                    st.delete(rid)
                 continue
             if not part.oversized(budget_rows):
                 if pool is not None:
                     j = idx  # keep up to `workers` upcoming sorts in flight
                     while len(pending) < workers and j < len(items):
                         pj, fj = items[j]
-                        if j not in pending and not pj.oversized(budget_rows):
+                        if (j not in pending and str(j) not in done
+                                and not pj.oversized(budget_rows)):
                             pending[j] = pool.submit(sorted_partition, pj, fj)
                         j += 1
-                    words, payloads = pending.pop(idx).result()
+                    try:
+                        words, payloads = pending.pop(idx).result()
+                    except BaseException:
+                        # a doomed sort must fail the stream promptly:
+                        # drop the speculative lookahead, don't wait on it
+                        for f in pending.values():
+                            f.cancel()
+                        raise
                 else:
-                    words, payloads = sorted_partition(part, frags)
+                    try:
+                        words, payloads = sorted_partition(part, frags)
+                    except StorePermanentError:
+                        if not getattr(st, "failover_to_disk", False):
+                            raise
+                        # the placement's sort is permanently gone but its
+                        # fragments are not: migrate what remains to disk
+                        # and re-sort this partition there
+                        fail_over(idx)
+                        part, frags = items[idx]
+                        words, payloads = sorted_partition(part, frags)
                 words, payloads = clip(words, payloads)
+                if journal is not None:
+                    journal_done(idx, [store.put(words, *payloads)]
+                                 if words.shape[0] else [])
                 if words.shape[0]:
                     yield words, payloads
                     emitted += int(words.shape[0])
@@ -391,18 +559,38 @@ def stream_sorted_words(
                 assert part.num_bins == 1, "only single bins can be oversized"
                 sub_fn = (lambda fr: lambda: (
                     (a[0], tuple(a[1:])) for a in
-                    (store.get(rid) for rid in fr)))(frags)
+                    (st.get(rid) for rid in fr)))(frags)
+                rids = []
                 for words, payloads in stream_sorted_words(
-                        sub_fn, bits, budget, store, row_bytes, hi=hi - w,
+                        sub_fn, bits, budget, st, row_bytes, hi=hi - w,
                         executor=executor, partition_bits=partition_bits,
                         limit_rows=room()):
+                    if journal is not None:
+                        rids.append(store.put(words, *payloads))
                     yield words, payloads
                     emitted += int(words.shape[0])
-            for rid in frags:
-                store.delete(rid)
+                if journal is not None:
+                    journal_done(idx, rids)
+            for rid in items[idx][1]:
+                # an oversized partition's recursion may itself have
+                # failed over and migrated (deleted) these fragments
+                if rid in st:
+                    st.delete(rid)
+        if journal is not None:
+            # complete: the result runs served their purpose; drop them
+            # and mark the manifest spent (resuming a complete manifest
+            # starts fresh)
+            for rids in done.values():
+                for rid in rids:
+                    if rid in store:
+                        store.delete(rid)
+            manifest["complete"] = True
+            store.write_log(journal, manifest)
     finally:
         if pool is not None:
-            pool.shutdown(wait=True)
+            pool.shutdown(wait=True, cancel_futures=True)
+        if fallback is not None:
+            fallback.close()
 
 
 def _key_chunks_fn(source: ChunkSource, with_rowids: bool):
@@ -436,6 +624,8 @@ def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
                   store: Optional[PlacementStore] = None,
                   executor: Optional[PlanExecutor] = None,
                   partition_bits: int = DEFAULT_PARTITION_BITS,
+                  journal: Optional[str] = None,
+                  resume=None,
                   ) -> Iterator[np.ndarray]:
     """Sort a streamed dataset of ``p``-bit keys under a byte budget.
 
@@ -450,6 +640,12 @@ def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
     when the generator finishes or is closed), or a
     :class:`~repro.stream.device_store.DeviceShardStore` to place
     fragments on a jax mesh and sort each partition distributed.
+
+    ``journal`` names a crash-resume manifest kept current on the
+    store's log channel; ``resume`` replays a prior journaled run
+    (manifest dict or journal name), recomputing zero completed
+    partitions — see :func:`stream_sorted_words`.  Both need a caller
+    store on a durable root.
     """
     assert 0 <= p <= 32, f"p={p} out of range (0..32)"
     own_store = store is None
@@ -458,7 +654,8 @@ def external_sort(source: ChunkSource, p: int, budget: MemoryBudget,
         chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=False)
         for words, _ in stream_sorted_words(
                 chunks_fn, p, budget, store, row_cost_bytes(1),
-                executor=executor, partition_bits=partition_bits):
+                executor=executor, partition_bits=partition_bits,
+                journal=journal, resume=resume):
             out = np.ascontiguousarray(words[:, 0])
             yield out.view(dtype_cell[0]) if dtype_cell else out
     finally:
@@ -470,6 +667,8 @@ def external_argsort(source: ChunkSource, p: int, budget: MemoryBudget,
                      store: Optional[PlacementStore] = None,
                      executor: Optional[PlanExecutor] = None,
                      partition_bits: int = DEFAULT_PARTITION_BITS,
+                     journal: Optional[str] = None,
+                     resume=None,
                      ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
     """Like :func:`external_sort`, but each yielded chunk is ``(sorted
     keys, int64 global arrival indices)`` — the stable permutation, in
@@ -484,7 +683,8 @@ def external_argsort(source: ChunkSource, p: int, budget: MemoryBudget,
         chunks_fn, dtype_cell = _key_chunks_fn(source, with_rowids=True)
         for words, (rowids,) in stream_sorted_words(
                 chunks_fn, p, budget, store, row_cost_bytes(1, 8),
-                executor=executor, partition_bits=partition_bits):
+                executor=executor, partition_bits=partition_bits,
+                journal=journal, resume=resume):
             out = np.ascontiguousarray(words[:, 0])
             yield (out.view(dtype_cell[0]) if dtype_cell else out), rowids
     finally:

@@ -1,0 +1,503 @@
+"""Chaos suite for the stream subsystem's fault-tolerance layer.
+
+The contract under any single injected fault: **bit-exact output, or the
+matching typed error — never a hang, never silent corruption.**
+
+* the chaos matrix drives every registered injection site ×
+  {transient, corrupt, permanent} × 3 seeds through the external sort
+  (disk sites via ``external_argsort``, device sites via a 1-device
+  ``DeviceShardStore``) under a hard wall-clock timeout;
+* durable-spill tests hand-damage on-disk bytes and assert the CRC
+  verification catches them; reopen tests assert committed runs survive
+  a new store over the same root and torn leftovers are swept;
+* the kill-and-resume test crashes a journaled sort at a partition
+  boundary, reopens the store cold, resumes, and asserts the output is
+  bit-identical with **zero** completed partitions recomputed (counted
+  via the put/get logs);
+* the worker-pool tests assert a raising partition sort cancels the
+  lookahead and surfaces promptly at 1/2/3 workers (subprocess + hard
+  timeout — a deadlocked pool would hang the child, not just fail it).
+"""
+
+import contextlib
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core.faults import (
+    CorruptFragmentError,
+    FaultPlan,
+    FaultSpec,
+    StoreError,
+    StorePermanentError,
+    TransientStoreError,
+)
+from repro.stream import (
+    ArraySource,
+    MemoryBudget,
+    RunStore,
+    StreamTable,
+    external_argsort,
+    external_sort,
+    stream_order_by,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@contextlib.contextmanager
+def hard_timeout(seconds: int):
+    """SIGALRM-based wall clock: a chaos case that hangs must *fail*,
+    not stall the suite (main-thread only, which is where tests run)."""
+
+    def fire(signum, frame):
+        raise TimeoutError(f"chaos case exceeded {seconds}s wall clock")
+
+    old = signal.signal(signal.SIGALRM, fire)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# --- plan / registry unit behavior -------------------------------------------
+
+
+def test_fault_plan_parse_and_determinism():
+    plan = FaultPlan.parse("run_store.put:transient:2,run_store.get:corrupt")
+    assert plan.spec_for("run_store.put") == FaultSpec(
+        "run_store.put", "transient", nth=2)
+    assert plan.spec_for("run_store.get").kind == "corrupt"
+    assert plan.spec_for("nope") is None
+    # seeded single-fault plans are deterministic and seed-sensitive
+    a = FaultPlan.single("run_store.put", "transient", seed=7)
+    assert a == FaultPlan.single("run_store.put", "transient", seed=7)
+    nths = {FaultPlan.single("run_store.put", "transient", seed=s)
+            .specs[0].nth for s in range(16)}
+    assert len(nths) > 1, "the seed must actually move the trigger"
+
+
+def test_fault_spec_fires():
+    s = FaultSpec("x", "transient", nth=3, times=2)
+    assert [s.fires(h) for h in range(1, 7)] == [
+        False, False, True, True, False, False]
+    p = FaultSpec("x", "permanent", nth=3)
+    assert [p.fires(h) for h in range(1, 6)] == [
+        False, False, True, True, True], "permanent means dead forever"
+
+
+def test_registered_sites_cover_both_stores():
+    sites = faults.registered_sites()
+    for prefix in ("run_store", "device_store"):
+        for op in ("put", "get", "delete", "distribute", "sort_rows"):
+            assert f"{prefix}.{op}" in sites, f"missing site {prefix}.{op}"
+
+
+def test_poll_raises_typed_and_returns_corrupt():
+    plan = FaultPlan((FaultSpec("s", "transient", nth=1),
+                      FaultSpec("t", "permanent", nth=1),
+                      FaultSpec("u", "corrupt", nth=1)))
+    with faults.inject(plan) as inj:
+        with pytest.raises(TransientStoreError):
+            faults.poll("s")
+        with pytest.raises(StorePermanentError):
+            faults.poll("t")
+        assert faults.poll("u") == "corrupt"  # caller applies the damage
+        assert faults.poll("u") is None       # fired once
+        assert len(inj.fired) == 3
+
+
+def test_with_retries_budget_and_classification(monkeypatch):
+    calls = {"n": 0}
+    retried = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientStoreError("site", "hiccup")
+        return "ok"
+
+    monkeypatch.setenv(faults.RETRIES_ENV, "2")
+    assert faults.with_retries(
+        "site", flaky, on_retry=lambda: retried.update(
+            n=retried["n"] + 1)) == "ok"
+    assert calls["n"] == 3 and retried["n"] == 2
+
+    monkeypatch.setenv(faults.RETRIES_ENV, "1")
+    calls["n"] = 0
+    with pytest.raises(TransientStoreError):
+        faults.with_retries("site", flaky)
+    assert calls["n"] == 2, "retry budget is REPRO_STORE_RETRIES"
+
+    # transient-classified OSErrors retry and surface typed; permanent
+    # ones convert immediately
+    def eio():
+        raise OSError(5, "I/O error")  # EIO
+
+    with pytest.raises(TransientStoreError):
+        faults.with_retries("site", eio)
+
+    def eperm():
+        raise PermissionError(1, "nope")  # EPERM: not transient
+
+    with pytest.raises(StorePermanentError):
+        faults.with_retries("site", eperm)
+    assert faults.classify_oserror(OSError(5, "x")) == "transient"
+    assert faults.classify_oserror(OSError(2, "x")) == "permanent"
+
+
+# --- durable spill: atomic puts, CRC-verified gets, reopen -------------------
+
+
+def test_put_is_committed_by_meta_and_verified_by_crc(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    a = np.arange(100, dtype=np.uint32).reshape(-1, 1)
+    rid = store.put(a, np.arange(100, dtype=np.int64))
+    assert os.path.exists(store._meta_path(rid))
+    got = store.get(rid)
+    assert np.array_equal(got[0], a)
+
+    # hand-damage the on-disk bytes: the next get must detect, not consume
+    with open(store._path(rid, 0), "r+b") as f:
+        f.seek(13)
+        f.write(b"\x5a")
+    with pytest.raises(CorruptFragmentError):
+        store.get(rid)
+    with pytest.raises(CorruptFragmentError):
+        store.get(rid, mmap=True)  # the merge path verifies too
+    store.close()
+
+
+def test_reopen_recovers_committed_and_sweeps_torn(tmp_path):
+    root = str(tmp_path / "runs")
+    store = RunStore(root)
+    a = np.arange(64, dtype=np.uint32).reshape(-1, 1)
+    rid = store.put(a)
+    # simulate a crash mid-put: data file without a meta record, plus a
+    # stray tmp file
+    with open(os.path.join(root, "run00009999_0.npy"), "wb") as f:
+        f.write(b"torn")
+    with open(os.path.join(root, "stray.npy.tmp"), "wb") as f:
+        f.write(b"half")
+
+    reopened = RunStore(root)  # no close(): the "process died" path
+    assert rid in reopened and len(reopened) == 1
+    assert np.array_equal(reopened.get(rid)[0], a)
+    assert reopened.events["recover.torn_run"] == 1
+    assert reopened.events["recover.tmp_swept"] == 1
+    assert not os.path.exists(os.path.join(root, "run00009999_0.npy"))
+    assert reopened._next_id > rid, "the id watermark survives reopen"
+
+
+def test_delete_and_nbytes_count_swallowed_events(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    rid = store.put(np.arange(32, dtype=np.uint32).reshape(-1, 1))
+    os.remove(store._path(rid, 0))
+    assert store.nbytes() == 0
+    assert store.events["nbytes.missing"] == 1
+    store.delete(rid)  # missing file: swallowed but counted, not silent
+    assert store.events["delete.missing"] >= 1
+    assert rid not in store
+
+
+def test_transient_faults_retry_and_count(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    with faults.inject(FaultPlan((
+            FaultSpec("run_store.put", "transient", nth=1),))) as inj:
+        rid = store.put(np.arange(8, dtype=np.uint32).reshape(-1, 1))
+        assert inj.fired and store.events["put.retry"] == 1
+    assert np.array_equal(store.get(rid)[0].ravel(),
+                          np.arange(8, dtype=np.uint32))
+
+
+def test_log_channel_round_trip_and_verification(tmp_path):
+    store = RunStore(str(tmp_path / "runs"))
+    store.write_log("manifest", {"phase": "histogram", "counts": [1, 2]})
+    assert store.read_log("manifest")["counts"] == [1, 2]
+    assert store.read_log("absent") is None
+    # the log survives reopen and is tamper-evident
+    reopened = RunStore(str(tmp_path / "runs"))
+    assert reopened.read_log("manifest")["phase"] == "histogram"
+    with open(store._log_path("manifest"), "r+") as f:
+        raw = f.read().replace("histogram", "histogrub")
+        f.seek(0)
+        f.write(raw)
+    with pytest.raises(CorruptFragmentError):
+        reopened.read_log("manifest")
+
+
+# --- MemoryBudget exception-path accounting ----------------------------------
+
+
+def test_budget_hold_releases_on_exception():
+    budget = MemoryBudget(1 << 20)
+    a = np.zeros(1000, np.uint32)
+    with pytest.raises(RuntimeError):
+        with budget.hold(a, a):
+            assert budget.held_bytes == 2 * a.nbytes
+            raise RuntimeError("mid-operation failure")
+    assert budget.held_bytes == 0, "a raising operation must release"
+    assert budget.peak_bytes == 2 * a.nbytes
+
+
+def test_sort_charge_released_when_sort_raises():
+    """The satellite regression: a partition sort killed mid-flight (an
+    injected fault inside the held region) must release its charge so
+    subsequent admission stays honest."""
+    store = RunStore()
+    budget = MemoryBudget(1 << 20)
+    words = np.arange(4096, dtype=np.uint32)[::-1].copy().reshape(-1, 1)
+    with faults.inject(FaultPlan((
+            FaultSpec("run_store.sort_rows", "permanent", nth=1),))):
+        with pytest.raises(StorePermanentError):
+            store.sort_rows(words, (), 16, 16, budget)
+    assert budget.held_bytes == 0
+    peak_after_failure = budget.peak_bytes
+    # and the same budget still runs a clean sort to completion
+    out, _ = store.sort_rows(words, (), 16, 16, budget)
+    assert np.array_equal(out.ravel(), np.arange(4096, dtype=np.uint32))
+    assert budget.peak_bytes >= peak_after_failure
+    store.close()
+
+
+# --- the chaos matrix --------------------------------------------------------
+
+_KINDS = ("transient", "corrupt", "permanent")
+_SEEDS = (0, 1, 2)
+_DISK_SITES = tuple(s for s in faults.registered_sites()
+                    if s.startswith("run_store."))
+_DEVICE_SITES = tuple(s for s in faults.registered_sites()
+                      if s.startswith("device_store."))
+
+
+def _chaos_keys():
+    rng = np.random.default_rng(42)
+    return rng.integers(0, 1 << 16, 12000, dtype=np.int32)
+
+
+def _assert_chaos_contract(site, kind, inj, raised, bit_exact):
+    """The single-fault contract: bit-exact output or the matching typed
+    error — and a *fired* data-damaging fault is never silently absorbed."""
+    if raised is None:
+        assert bit_exact, f"{site}:{kind} emitted wrong bytes silently"
+        if kind == "corrupt" and site.endswith((".put", ".get")):
+            assert not inj.fired, (
+                f"{site} corruption fired yet output passed verification")
+    else:
+        assert isinstance(raised, StoreError), (
+            f"{site}:{kind} raised untyped {type(raised).__name__}")
+        assert inj.fired, "a typed error without a fired fault"
+        if kind == "corrupt":
+            assert isinstance(raised, CorruptFragmentError)
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+@pytest.mark.parametrize("kind", _KINDS)
+@pytest.mark.parametrize("site", _DISK_SITES)
+def test_chaos_matrix_disk(site, kind, seed):
+    keys = _chaos_keys()
+    expect = np.sort(keys, kind="stable")
+    expect_ids = np.argsort(keys, kind="stable")
+    budget = MemoryBudget(48 * 1024)
+    src = ArraySource(keys, budget.rows(12))
+    raised, out, ids = None, None, None
+    with hard_timeout(180):
+        with faults.inject(FaultPlan.single(site, kind, seed=seed)) as inj:
+            try:
+                pieces = list(external_argsort(src, 16, budget))
+                out = np.concatenate([w for w, _ in pieces])
+                ids = np.concatenate([r for _, r in pieces])
+            except StoreError as e:
+                raised = e
+    bit_exact = (out is not None and np.array_equal(out, expect)
+                 and np.array_equal(ids, expect_ids))
+    _assert_chaos_contract(site, kind, inj, raised, bit_exact)
+    if kind == "transient":
+        assert raised is None, "one transient must be absorbed by retries"
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+@pytest.mark.parametrize("kind", _KINDS)
+@pytest.mark.parametrize("site", _DEVICE_SITES)
+def test_chaos_matrix_device(site, kind, seed):
+    from repro.stream import DeviceShardStore
+
+    keys = _chaos_keys()
+    expect = np.sort(keys, kind="stable")
+    budget = MemoryBudget(48 * 1024)
+    src = ArraySource(keys, budget.rows(12))
+    raised, out = None, None
+    with hard_timeout(300):
+        with faults.inject(FaultPlan.single(site, kind, seed=seed)) as inj:
+            store = DeviceShardStore()
+            try:
+                out = np.concatenate(list(external_sort(
+                    src, 16, budget, store=store)))
+            except StoreError as e:
+                raised = e
+    bit_exact = out is not None and np.array_equal(out, expect)
+    _assert_chaos_contract(site, kind, inj, raised, bit_exact)
+    if site == "device_store.sort_rows" and kind == "permanent":
+        assert raised is None and bit_exact, (
+            "a permanent mid-sort device fault must fail over to disk "
+            "and still emit bit-exact output")
+
+
+def test_chaos_stream_table_order_by():
+    """StreamTable ops ride the same boundaries: a transient is absorbed,
+    injected spill corruption surfaces typed — never wrong rows."""
+    from repro.query import Table, order_by
+
+    rng = np.random.default_rng(3)
+    n = 6000
+    k = rng.integers(0, 500, n).astype(np.int32)
+    v = rng.standard_normal(n).astype(np.float32)
+    ref = order_by(Table({"k": k, "v": v}), "k")
+
+    def chunks():
+        for lo in range(0, n, 700):
+            yield Table({"k": k[lo:lo + 700], "v": v[lo:lo + 700]})
+
+    with hard_timeout(180):
+        with faults.inject(FaultPlan((
+                FaultSpec("run_store.put", "transient", nth=2),))) as inj:
+            st = StreamTable(chunks, MemoryBudget(4 * 1024))
+            res = stream_order_by(st, "k")
+            got = res.to_table()
+            assert inj.fired
+        for name in ("k", "v"):
+            assert np.array_equal(np.asarray(got.column(name)),
+                                  np.asarray(ref.column(name)))
+        res.close()
+        with faults.inject(FaultPlan((
+                FaultSpec("run_store.get", "corrupt", nth=3),))):
+            st = StreamTable(chunks, MemoryBudget(4 * 1024))
+            with pytest.raises(CorruptFragmentError):
+                stream_order_by(st, "k").to_table()
+
+
+# --- kill-and-resume ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("crash_after", [1, 4, 9])
+def test_kill_and_resume_bit_exact_zero_recompute(tmp_path, crash_after):
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 1 << 20, 40000, dtype=np.int32)
+    expect = np.sort(keys, kind="stable")
+
+    def run(store, budget, **kw):
+        return list(external_sort(ArraySource(keys, budget.rows(4)),
+                                  20, budget, store=store, **kw))
+
+    root = str(tmp_path / "spill")
+    store = RunStore(root)
+    # crash: the (crash_after+1)-th partition sort dies permanently
+    with faults.inject(FaultPlan((FaultSpec(
+            "run_store.sort_rows", "permanent", nth=crash_after + 1),))):
+        with pytest.raises(StorePermanentError):
+            run(store, MemoryBudget(64 * 1024), journal="job")
+    manifest = RunStore(root).read_log("job")
+    assert manifest is not None and not manifest["complete"]
+    done = manifest["done"]
+    assert len(done) == crash_after, "one journal commit per emitted part"
+    done_frag_ids = {rid for idx in done
+                     for rid in manifest["frag_ids"][int(idx)]}
+    done_run_ids = {rid for rids in done.values() for rid in rids}
+
+    # "process death": a cold store over the same root, fresh logs
+    resumed = RunStore(root)
+    budget = MemoryBudget(64 * 1024)
+    with hard_timeout(300):
+        out = np.concatenate(run(resumed, budget, resume="job"))
+    assert np.array_equal(out, expect), "resumed output differs"
+
+    # zero recomputation, by the counting logs: completed partitions'
+    # fragments were never loaded again — only their spilled result runs
+    # — and the resume re-sorted exactly the remaining partitions
+    assert not (set(resumed.get_log) & done_frag_ids)
+    assert done_run_ids <= set(resumed.get_log)
+    total = len(manifest["frag_ids"])
+    assert len(resumed.put_log) == total - len(done), (
+        "a resumed run spills result runs only for partitions the crash "
+        "left unfinished")
+    final = resumed.read_log("job")
+    assert final["complete"]
+    assert len(resumed) == 0, "result runs are dropped at completion"
+
+
+def test_resume_requires_same_budget(tmp_path):
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 1 << 16, 20000, dtype=np.int32)
+    root = str(tmp_path / "spill")
+    store = RunStore(root)
+    with faults.inject(FaultPlan((FaultSpec(
+            "run_store.sort_rows", "permanent", nth=2),))):
+        with pytest.raises(StorePermanentError):
+            budget = MemoryBudget(32 * 1024)
+            list(external_sort(ArraySource(keys, budget.rows(4)), 16,
+                               budget, store=store, journal="job"))
+    resumed = RunStore(root)
+    budget = MemoryBudget(64 * 1024)  # different budget → different plan
+    with pytest.raises(AssertionError, match="same memory budget"):
+        list(external_sort(ArraySource(keys, budget.rows(4)), 16, budget,
+                           store=resumed, resume="job"))
+
+
+# --- worker pool: raising sorts must cancel and surface promptly -------------
+
+
+@pytest.mark.parametrize("workers", [1, 2, 3])
+def test_worker_pool_failure_surfaces_no_deadlock(workers):
+    code = textwrap.dedent(f"""
+        import numpy as np
+        from repro.core.faults import StorePermanentError
+        from repro.stream import ArraySource, MemoryBudget, external_sort
+        rng = np.random.default_rng(5)
+        keys = rng.integers(0, 1 << 18, 30000, dtype=np.int32)
+        budget = MemoryBudget(48 * 1024)
+        try:
+            list(external_sort(ArraySource(keys, budget.rows(4)), 18,
+                               budget))
+            raise SystemExit("expected the injected permanent fault")
+        except StorePermanentError:
+            pass
+        import threading
+        live = [t for t in threading.enumerate()
+                if t is not threading.main_thread() and t.is_alive()
+                and not t.daemon]
+        assert not live, f"leaked worker threads: {{live}}"
+        print("POOL-SHUTDOWN-CLEAN", {workers})
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=240,  # the bug under test is a deadlocked emission loop
+        env={"PYTHONPATH": "src",
+             "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root"),
+             "JAX_PLATFORMS": "cpu",
+             "REPRO_STREAM_WORKERS": str(workers),
+             "REPRO_FAULTS": "run_store.sort_rows:permanent:3"},
+        cwd=REPO_ROOT)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert f"POOL-SHUTDOWN-CLEAN {workers}" in r.stdout
+
+
+def test_worker_pool_cancels_pending_in_process(monkeypatch):
+    monkeypatch.setenv("REPRO_STREAM_WORKERS", "3")
+    rng = np.random.default_rng(6)
+    keys = rng.integers(0, 1 << 18, 30000, dtype=np.int32)
+    budget = MemoryBudget(48 * 1024)
+    with hard_timeout(120):
+        with faults.inject(FaultPlan((FaultSpec(
+                "run_store.sort_rows", "permanent", nth=1),))):
+            with pytest.raises(StorePermanentError):
+                list(external_sort(ArraySource(keys, budget.rows(4)), 18,
+                                   budget))
