@@ -167,17 +167,33 @@ def _baseline_points(path: str):
 
 
 def smoke(n: int = 1 << 14, p: int = 32,
-          baseline_path: str = "BENCH_sort.json") -> float:
+          baseline_path: str = "BENCH_sort.json",
+          trace_out: str = None) -> float:
     """Both engines under a hard budget + the committed-baseline relative
-    guard (CI pass-loop / engine-path regression gate)."""
+    guard (CI pass-loop / engine-path regression gate).  With
+    ``trace_out``, each engine also does one traced *eager* executor run
+    and the per-pass span stream (bytes + walls, measured_b_eff next to
+    the analytic figure) is exported as Perfetto JSON."""
+    from repro import obs
+
     rng = np.random.default_rng(0)
     keys = _keys(rng, n, p)
     worst = 0.0
+    outer = obs.tracing() if trace_out else None
+    outer_session = outer.__enter__() if outer is not None else None
     for engine, w in (("onehot", 4), ("scatter", 8)):
         plan = make_sort_plan(n, p, max_bins_log2=w, engine=engine)
-        t = time_fn(functools.partial(fractal_sort, p=p, plan=plan), keys)
-        row(f"sortplan/smoke/n{n}/p{p}/{engine}", t,
-            f"budget_s={SMOKE_BUDGET_S}")
+        with obs.suspended():  # the timed wall never includes the tracer
+            t = time_fn(functools.partial(fractal_sort, p=p, plan=plan),
+                        keys)
+        derived = f"budget_s={SMOKE_BUDGET_S}"
+        if outer is not None:
+            from benchmarks.run import measured_sort_point
+
+            st = fractal_sort_stats(n, p, plan=plan)
+            m = measured_sort_point(keys, plan, st)
+            derived += f" measured_b_eff={m['measured_b_eff']:.3f}"
+        row(f"sortplan/smoke/n{n}/p{p}/{engine}", t, derived)
         worst = max(worst, t)
         if t > SMOKE_BUDGET_S:
             raise SystemExit(
@@ -187,8 +203,9 @@ def smoke(n: int = 1 << 14, p: int = 32,
     for pt in _baseline_points(baseline_path):
         bn, bp, w = pt["n"], pt["p"], pt["max_bins_log2"]
         plan = make_sort_plan(bn, bp, max_bins_log2=w, engine=pt["engine"])
-        t = time_fn(functools.partial(fractal_sort, p=bp, plan=plan),
-                    _keys(np.random.default_rng(0), bn, bp))
+        with obs.suspended():
+            t = time_fn(functools.partial(fractal_sort, p=bp, plan=plan),
+                        _keys(np.random.default_rng(0), bn, bp))
         limit = max(SMOKE_REGRESSION_FACTOR * pt["wall_s"],
                     SMOKE_REGRESSION_FLOOR_S)
         row(f"sortplan/guard/n{bn}/p{bp}/{pt['engine']}", t,
@@ -198,15 +215,24 @@ def smoke(n: int = 1 << 14, p: int = 32,
                 f"committed baseline point n={bn} p={bp} "
                 f"engine={pt['engine']} regressed: {t:.3f}s vs "
                 f"{pt['wall_s']:.3f}s committed (limit {limit:.3f}s)")
+    if outer is not None:
+        outer.__exit__(None, None, None)
+        outer_session.trace.export(trace_out)
+        row("sortplan/smoke/trace", float(len(outer_session.trace)),
+            f"perfetto={trace_out}")
     return worst
 
 
 if __name__ == "__main__":
-    mode = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks.run import trace_flag
+
+    _argv = sys.argv[1:]
+    _trace_out = trace_flag(_argv)
+    mode = _argv[0] if _argv else None
     if mode == "rank":
         run_rank_compare()
     elif mode == "smoke":
-        smoke()
+        smoke(trace_out=_trace_out)
     elif mode == "tune":
         tune()
     else:

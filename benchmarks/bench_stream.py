@@ -53,8 +53,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row
+from repro import obs
 from repro.core import dispatch
 from repro.stream import ArraySource, MemoryBudget, external_sort
+from repro.stream.chunks import RunStore
 from repro.stream.external import row_cost_bytes
 
 # Record schema history:
@@ -65,23 +67,42 @@ from repro.stream.external import row_cost_bytes
 #   3 — optional top-level "chaos" section: the chaos-smoke mode's
 #       per-fault-site transient-injection walls (its own provenance;
 #       the smoke-guard point in "points" is untouched)
-STREAM_JSON_SCHEMA = 3
+#   4 — the smoke point runs TRACED: it carries measured per-phase
+#       traffic ("measured": bytes + walls + bytes/s per span name) and
+#       the spilled-bytes invariant record (store.put span bytes ==
+#       store put ledger == registry counter, asserted in-process);
+#       chaos points carry the per-site retry-event count from the
+#       metrics registry; the record embeds the registry snapshot
+STREAM_JSON_SCHEMA = 4
 
 #: chunk sizing uses the subsystem's own single-word row-cost model, so
 #: the benchmark's budget ratio tracks external_sort's actual math
 _ROW_COST = row_cost_bytes(1)
 
 
-def _point(n: int, p: int, budget_bytes: int, check: bool = True) -> dict:
+def _point(n: int, p: int, budget_bytes: int, check: bool = True,
+           traced: bool = False) -> dict:
     rng = np.random.default_rng(0)
     keys = rng.integers(0, 1 << p, n, dtype=np.uint64).astype(
         np.uint32).astype(np.int32 if p < 32 else np.uint32)
     budget = MemoryBudget(budget_bytes)
     src = ArraySource(keys, budget.rows(_ROW_COST))
 
-    t0 = time.perf_counter()
-    chunks = list(external_sort(src, p, budget))
-    wall = time.perf_counter() - t0
+    extra = None
+    if traced:
+        # explicit store so its put/get byte ledgers stay readable for
+        # the spilled-bytes invariant after the sort finishes
+        store = RunStore()
+        reg0 = obs.metrics.snapshot()
+        t0 = time.perf_counter()
+        with obs.tracing() as session:
+            chunks = list(external_sort(src, p, budget, store=store))
+        wall = time.perf_counter() - t0
+        extra = _measured_stream(session.trace, store, reg0)
+    else:
+        t0 = time.perf_counter()
+        chunks = list(external_sort(src, p, budget))
+        wall = time.perf_counter() - t0
     out = np.concatenate(chunks) if chunks else keys[:0]
 
     karr = jnp.asarray(keys)
@@ -96,7 +117,7 @@ def _point(n: int, p: int, budget_bytes: int, check: bool = True) -> dict:
         assert budget.peak_bytes <= budget.limit_bytes, (
             f"peak {budget.peak_bytes} B over the {budget.limit_bytes} B "
             "budget")
-    return {
+    pt = {
         "n": n,
         "p": p,
         "budget_bytes": budget_bytes,
@@ -107,6 +128,46 @@ def _point(n: int, p: int, budget_bytes: int, check: bool = True) -> dict:
         "keys_per_s": n / wall,
         "peak_resident_bytes": budget.peak_bytes,
         "oracle_wall_s": oracle_wall,
+    }
+    if extra is not None:
+        pt.update(extra)
+    return pt
+
+
+
+def _measured_stream(tr, store, reg0: dict) -> dict:
+    """Measured per-phase traffic plus the spilled-bytes invariant:
+    every byte a ``store.put`` span claims must appear in the store's
+    put ledger AND in the registry counter — three independent
+    accountings of the same spill traffic.  A mismatch is a
+    SystemExit: it means one instrumentation layer lies about I/O."""
+    tr.assert_well_formed()
+    report = obs.bandwidth_report(tr)
+    reg1 = obs.metrics.snapshot()
+    key = f"store.{store.site_prefix}.put.bytes"
+    span_put = tr.total("store.put", "bytes")
+    ledger_put = sum(store.put_log_bytes)
+    registry_put = reg1.get(key, 0) - reg0.get(key, 0)
+    if not span_put == ledger_put == registry_put:
+        raise SystemExit(
+            f"spilled-bytes invariant broken: store.put spans claim "
+            f"{span_put} B, store ledger {ledger_put} B, registry "
+            f"counter {registry_put} B")
+    return {
+        "measured": {
+            "phases": report["phases"],
+            "bytes_total": report["measured_bytes_total"],
+            "bytes_per_s": report["measured_bytes_per_s"],
+        },
+        "spill_invariant": {
+            "span_put_bytes": span_put,
+            "ledger_put_bytes": ledger_put,
+            "registry_put_bytes": registry_put,
+            "span_get_bytes": tr.total("store.get", "bytes"),
+            "ledger_get_bytes": sum(store.get_log_bytes),
+            "ok": True,
+        },
+        "_trace": tr,
     }
 
 
@@ -180,7 +241,7 @@ def _assert_clean_baseline(path: str) -> None:
 
 
 def smoke(path: str = "BENCH_stream.json",
-          allow_dirty: bool = False) -> dict:
+          allow_dirty: bool = False, trace_out: str = None) -> dict:
     """One ≥ 8×-budget external sort under a hard wall: asserts
     bit-exactness, the resident-bytes budget, and the dispatch-count
     invariant (O(1) compiled programs per external sort — the shared
@@ -192,14 +253,20 @@ def smoke(path: str = "BENCH_stream.json",
     _assert_clean_baseline(path)
     baseline = _baseline_wall(path)
     with dispatch.track() as seen:
-        pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
+        pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True,
+                    traced=True)
+    tr = pt.pop("_trace")
+    if trace_out:
+        tr.export(trace_out)
+        row(f"stream/smoke/trace", len(tr), f"perfetto={trace_out}")
     pt["smoke_guard"] = True
     pt.update(_dispatch_accounting(seen))
     row(f"stream/smoke/n{pt['n']}/b{pt['budget_bytes']}", pt["wall_s"],
         f"budget_s={SMOKE_BUDGET_S} ratio={pt['ratio_to_budget']:.0f}x "
         f"peak={pt['peak_resident_bytes']}B "
         f"compiles={pt['compiled_programs']} "
-        f"chains={pt['chain_executions']}")
+        f"chains={pt['chain_executions']} "
+        f"spilled={pt['spill_invariant']['span_put_bytes']}B")
     if pt["compiled_programs"] > SMOKE_MAX_COMPILES:
         raise SystemExit(
             f"smoke external sort compiled {pt['compiled_programs']} "
@@ -215,6 +282,7 @@ def smoke(path: str = "BENCH_stream.json",
         "schema": STREAM_JSON_SCHEMA,
         "provenance": _provenance(),
         "points": [pt],
+        "metrics": obs.metrics.snapshot(),
     }
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
@@ -259,21 +327,32 @@ def chaos_smoke(path: str = "BENCH_stream.json",
     t_all = time.perf_counter()
     chaos_pts = []
     for site in sites:
+        ev0 = len(obs.metrics.events("store.retry"))
         with faults.inject(
                 faults.FaultPlan.single(site, "transient", seed=0)) as inj:
             pt = _point(_SMOKE_N, 32, _SMOKE_BUDGET_BYTES, check=True)
         assert inj.fired, (
             f"{site}: the injected transient never fired — the smoke "
             "point no longer exercises this site")
+        # the fired transient must be visible as a structured retry
+        # event in the registry — the chaos run asserts the retry layer
+        # is observable, not just effective
+        retries = [e for e in obs.metrics.events("store.retry")[ev0:]
+                   if e.get("site") == site]
+        assert retries, (
+            f"{site}: transient absorbed but no store.retry event in "
+            "the registry — with_retries lost its instrumentation")
         chaos_pts.append({
             "site": site,
             "kind": "transient",
             "fired_hit": inj.fired[0][2],
+            "retry_events": len(retries),
             "wall_s": pt["wall_s"],
             "bit_exact": True,  # asserted in _point; recorded for the log
         })
         row(f"stream/chaos-smoke/{site}", pt["wall_s"],
-            f"kind=transient fired_hit={inj.fired[0][2]} bit_exact=True")
+            f"kind=transient fired_hit={inj.fired[0][2]} "
+            f"retries={len(retries)} bit_exact=True")
     total = time.perf_counter() - t_all
     guard_overwrite(path, allow_dirty)
     try:
@@ -411,13 +490,14 @@ def distributed_smoke(path: str = "BENCH_distributed.json",
 
 
 if __name__ == "__main__":
-    from benchmarks.run import allow_dirty_flag
+    from benchmarks.run import allow_dirty_flag, trace_flag
 
     _allow_dirty = allow_dirty_flag(sys.argv)
     _argv = [a for a in sys.argv[1:] if a != "--allow-dirty"]
+    _trace_out = trace_flag(_argv)
     mode = _argv[0] if _argv else None
     if mode == "smoke":
-        smoke(allow_dirty=_allow_dirty)
+        smoke(allow_dirty=_allow_dirty, trace_out=_trace_out)
     elif mode == "chaos-smoke":
         chaos_smoke(allow_dirty=_allow_dirty)
     elif mode == "distributed-smoke":

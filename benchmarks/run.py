@@ -53,7 +53,10 @@ SORT_JSON_POINTS = (
 #   4 — query points carry the measured oracle-gap ratio + fused-chain
 #       dispatch counts; the order_by point is a smoke_guard baseline for
 #       the bench_query smoke's >2x relative ratio gate
-SORT_JSON_SCHEMA = 4
+#   5 — points carry MEASURED per-pass traffic (one traced eager executor
+#       run per point: bytes + wall per pass, measured_b_eff beside
+#       analytic_b_eff) and the record embeds the obs metrics snapshot
+SORT_JSON_SCHEMA = 5
 
 
 def _provenance() -> dict:
@@ -107,8 +110,54 @@ def allow_dirty_flag(argv) -> bool:
     return "--allow-dirty" in argv
 
 
+def trace_flag(argv):
+    """Shared ``--trace PATH`` CLI parse: pops the flag + its value from
+    ``argv`` in place and returns the Perfetto export path (or None)."""
+    if "--trace" not in argv:
+        return None
+    i = argv.index("--trace")
+    if i + 1 >= len(argv):
+        raise SystemExit("--trace needs an output path (e.g. "
+                         "--trace trace.json)")
+    path = argv[i + 1]
+    del argv[i:i + 2]
+    return path
+
+
+def measured_sort_point(keys, plan, stats) -> dict:
+    """Measured per-pass traffic for one sort point: a single traced
+    *eager* executor run (the jitted entry point would hide pass
+    boundaries), per-pass bytes + wall off the ``executor.pass`` spans,
+    and measured b_eff beside the analytic number via
+    ``obs.bandwidth_report``."""
+    import jax
+
+    from repro import obs
+    from repro.core.executor import JnpBackend, PlanExecutor
+
+    ex = PlanExecutor(JnpBackend())
+    with obs.suspended():  # warm the eager op caches outside the trace
+        jax.block_until_ready(ex.run(keys, plan))
+    with obs.tracing() as session:
+        ex.run(keys, plan)
+    tr = session.trace
+    report = obs.bandwidth_report(tr, analytic=stats)
+    passes = [{
+        "kind": span["attrs"].get("kind"),
+        "bits": span["attrs"].get("bits"),
+        "bytes": tr.span_bytes(span),
+        "wall_s": span["t1"] - span["t0"],
+    } for span in tr.find("executor.pass")]
+    return {
+        "measured_b_eff": report.get("measured_b_eff"),
+        "measured_bytes_per_s": report.get("measured_bytes_per_s"),
+        "passes": passes,
+    }
+
+
 def emit_sort_json(path: str = "BENCH_sort.json",
-                   allow_dirty: bool = False) -> dict:
+                   allow_dirty: bool = False,
+                   trace_out: str = None) -> dict:
     """Time :func:`fractal_sort` at the standard points (plus the query
     operators) and write the machine-readable perf record (wall time +
     the analytic traffic model behind the paper's b_eff figure)."""
@@ -120,18 +169,27 @@ def emit_sort_json(path: str = "BENCH_sort.json",
     from repro.core import fractal_sort, fractal_sort_stats, make_sort_plan
     from repro.core.autotune import tuned_plan
 
+    from repro import obs
+
     guard_overwrite(path, allow_dirty)
     rng = np.random.default_rng(0)
     results = []
+    # one outer session spanning every point: tracing() nests, so the
+    # per-point measured runs land in this window too and the export is
+    # the whole benchmark's span stream
+    outer = obs.tracing() if trace_out else None
+    outer_session = outer.__enter__() if outer is not None else None
     for n, p, w, engine, guard in SORT_JSON_POINTS:
         keys = rand_keys(rng, n, p)
         if w is None:
             plan = tuned_plan(n, p)  # the entry points' default resolution
         else:
             plan = make_sort_plan(n, p, max_bins_log2=w, engine=engine)
-        wall_s = time_fn(functools.partial(fractal_sort, p=p, plan=plan),
-                         keys)
+        with obs.suspended():  # time the sort, never the tracer
+            wall_s = time_fn(functools.partial(fractal_sort, p=p,
+                                               plan=plan), keys)
         st = fractal_sort_stats(n, p, plan=plan)
+        measured = measured_sort_point(keys, plan, st)
         engines = sorted({dp.engine or "auto" for dp in plan.passes})
         results.append({
             "n": n,
@@ -145,12 +203,20 @@ def emit_sort_json(path: str = "BENCH_sort.json",
             "keys_per_s": n / wall_s,
             "analytic_bytes_per_key": st.bytes_per_key,
             "analytic_b_eff": b_eff(st),
+            "measured_b_eff": measured["measured_b_eff"],
+            "measured_bytes_per_s": measured["measured_bytes_per_s"],
+            "measured_passes": measured["passes"],
         })
+    if outer is not None:
+        outer.__exit__(None, None, None)
+        outer_session.trace.export(trace_out)
+        print(f"wrote {trace_out} ({len(outer_session.trace)} spans)")
     record = {
         "schema": SORT_JSON_SCHEMA,
         "provenance": _provenance(),
         "points": results,
         "query": query_points(),
+        "metrics": obs.metrics.snapshot(),
     }
     with open(path, "w") as f:
         json.dump(record, f, indent=2)
@@ -173,9 +239,10 @@ def main() -> None:
 
     allow_dirty = allow_dirty_flag(sys.argv)
     argv = [a for a in sys.argv[1:] if a != "--allow-dirty"]
+    trace_out = trace_flag(argv)
     only = argv[0] if argv else None
     if only == "sort_json":
-        emit_sort_json(allow_dirty=allow_dirty)
+        emit_sort_json(allow_dirty=allow_dirty, trace_out=trace_out)
         return
     mods = {
         "latency": bench_latency, "memory": bench_memory,
@@ -190,7 +257,7 @@ def main() -> None:
         if only and only != name:
             continue
         mod.run()
-    emit_sort_json(allow_dirty=allow_dirty)
+    emit_sort_json(allow_dirty=allow_dirty, trace_out=trace_out)
 
 
 if __name__ == '__main__':

@@ -44,6 +44,7 @@ from repro.core.sort_plan import (
     SortPlan,
     make_sort_plan,
 )
+from repro.obs import metrics
 
 __all__ = [
     "autotune_plan",
@@ -214,6 +215,7 @@ def autotune_plan(n: int, p: int, backend: str = "jnp",
         return make_sort_plan(n, 0)
     global _CONSULTS
     _CONSULTS += 1
+    metrics.counter("autotune.consults").inc()
     path = cache_path or default_cache_path()
     bucket = shape_bucket(n)
     key = cache_key(backend, p, l_n, bucket)
@@ -224,9 +226,11 @@ def autotune_plan(n: int, p: int, backend: str = "jnp",
     if entry is not None and (
             unrestricted
             or (entry["max_bins_log2"], entry["engine"]) in grid):
+        metrics.counter("autotune.hit").inc()
         return make_sort_plan(n, p, l_n=l_n,
                               max_bins_log2=entry["max_bins_log2"],
                               engine=entry["engine"])
+    metrics.counter("autotune.miss").inc()
     if not measure:
         return make_sort_plan(n, p, l_n=l_n)
     n_meas = 1 << min(bucket, MEASURE_CAP_LOG2)

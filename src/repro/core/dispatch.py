@@ -17,6 +17,11 @@ noise next to the dispatch itself.  jax internals are never hooked —
 compile detection reads the jit object's own cache size (a new cache
 entry ⇔ this call traced/compiled), falling back to execution-only
 counting if that private surface moves.
+
+Every count also lands in the process-wide :mod:`repro.obs.metrics`
+registry as ``dispatch.<tag>`` / ``dispatch.<tag>.compiles``, so
+dispatch attribution shows up in the same snapshot as store bytes and
+retry events.
 """
 
 from __future__ import annotations
@@ -24,7 +29,9 @@ from __future__ import annotations
 import contextlib
 import threading
 from collections import Counter
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
+
+from repro.obs import metrics
 
 __all__ = ["counts", "record", "snapshot_delta", "track", "wrap"]
 
@@ -32,13 +39,20 @@ _counts: Counter = Counter()
 _lock = threading.Lock()
 
 
-def record(tag: str, compiled: bool = False) -> None:
-    """Count one jitted-program execution under ``tag`` (and one compile,
-    when this call also traced)."""
+def record(tag: str, compiled: bool = False,
+           compiles: Optional[int] = None) -> None:
+    """Count one jitted-program execution under ``tag`` (and any compile
+    events this call also performed: ``compiles`` gives the exact number
+    when the caller measured it; the legacy ``compiled`` flag counts
+    one)."""
+    n_compiles = int(compiles) if compiles is not None else int(bool(compiled))
     with _lock:
         _counts[tag] += 1
-        if compiled:
-            _counts[tag + ":compiles"] += 1
+        if n_compiles:
+            _counts[tag + ":compiles"] += n_compiles
+    metrics.counter(f"dispatch.{tag}").inc()
+    if n_compiles:
+        metrics.counter(f"dispatch.{tag}.compiles").inc(n_compiles)
 
 
 def counts() -> Dict[str, int]:
@@ -81,12 +95,31 @@ def _cache_size(fn) -> int:
 def wrap(tag: str, fn: Callable) -> Callable:
     """Count every call of a jitted callable under ``tag``; a call that
     grows the jit cache (first call per input shape/dtype) also counts as
-    a compile."""
+    a compile.
+
+    Compile detection diffs the cache size against a per-wrapped-fn
+    *last-seen* watermark under a lock, instead of the racy read → call →
+    read idiom: with N pool threads racing the same uncompiled shape, the
+    cache grows by one and exactly one caller observes the watermark
+    advance — concurrent same-shape calls can no longer double-count a
+    compile, and two threads compiling two *different* shapes each count
+    their own (the watermark advances twice).  The jitted call itself
+    stays outside the lock; only the bookkeeping serializes.
+    """
+    state_lock = threading.Lock()
+    seen = [_cache_size(fn)]
 
     def wrapped(*args, **kwargs):
-        before = _cache_size(fn)
         out = fn(*args, **kwargs)
-        record(tag, compiled=before >= 0 and _cache_size(fn) > before)
+        with state_lock:
+            now = _cache_size(fn)
+            if now >= 0 and seen[0] >= 0:
+                grew = max(0, now - seen[0])
+            else:
+                grew = 0
+            if now > seen[0]:
+                seen[0] = now
+        record(tag, compiles=grew)
         return out
 
     wrapped.__wrapped__ = fn

@@ -59,10 +59,12 @@ from __future__ import annotations
 import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.fractal_tree import exclusive_cumsum
 from repro.core.sort_plan import DigitPass, SortPlan
+from repro.obs import trace
 
 __all__ = [
     "PassBackend",
@@ -314,6 +316,54 @@ class PlanExecutor:
     def __init__(self, backend: PassBackend):
         self.backend = backend
 
+    # -- per-pass tracing ---------------------------------------------------
+
+    def _pass_stats(self, u, plan: SortPlan, with_index: bool):
+        """Per-pass byte ledger for span attribution, or None when spans
+        are off for this run.
+
+        Spans only fire on *eager* runs: the public sort entry points are
+        themselves jitted, and a span opened while jax is tracing would
+        measure trace time, not pass time — a Tracer input disables the
+        ledger.  The bytes attached are the analytic model's per-pass
+        read/write volumes (:func:`~repro.core.fractal_sort.
+        fractal_sort_stats`) — the quantities the paper's bandwidth model
+        counts — paired with *measured* per-pass wall, which is what
+        ``obs.bandwidth_report`` turns into measured bytes/s and
+        measured b_eff."""
+        if not trace.enabled():
+            return None
+        if isinstance(u, jax.core.Tracer):
+            return None
+        from repro.core.fractal_sort import fractal_sort_stats
+        n = int(u.shape[0])
+        try:
+            stats = fractal_sort_stats(n, plan.p, with_index=with_index,
+                                       plan=plan)
+        except Exception:
+            return None
+        if len(stats.pass_stats) != len(plan.passes):
+            return None
+        return stats.pass_stats
+
+    @staticmethod
+    def _pass_span(pass_stats, index: int, dp: DigitPass):
+        if pass_stats is None:
+            return trace.NULL
+        ps = pass_stats[index]
+        return trace.span(
+            "executor.pass", index=index, kind=ps.kind, shift=dp.shift,
+            bits=dp.bits, bytes_read=ps.bytes_read,
+            bytes_written=ps.bytes_written)
+
+    @staticmethod
+    def _sync(*arrays) -> None:
+        """Drain async dispatch so a pass span's wall covers its work."""
+        try:
+            jax.block_until_ready(arrays)
+        except Exception:
+            pass
+
     # -- plain sort ---------------------------------------------------------
 
     def run(self, keys: jnp.ndarray, plan: SortPlan,
@@ -331,24 +381,33 @@ class PlanExecutor:
         if u.shape[0] == 0 or not plan.passes:
             # empty input, or the p=0 identity plan
             return u if encode is not None else keys
-        for dp in plan.passes[:-1]:
-            u = self.backend.lsd_pass(u, dp)
+        pass_stats = self._pass_stats(u, plan, with_index=False)
+        for i, dp in enumerate(plan.passes[:-1]):
+            with self._pass_span(pass_stats, i, dp):
+                u = self.backend.lsd_pass(u, dp)
+                if pass_stats is not None:
+                    self._sync(u)
         last = plan.passes[-1]
-        if not self.backend.reconstructs:
-            return self.backend.lsd_pass(u, last)
-        rank, counts, _ = self.backend.rank(
-            _digit_of(u, last), last.n_bins,
-            batch_hint=last.rank_batch(self.backend.rank_base),
-            engine=last.engine)
-        if last.shift:
-            # compressed entries: only the trailing bits travel; the
-            # prefix is rebuilt from bin positions.
-            (trailing,) = self.backend.scatter(
-                rank, u & jnp.uint32((1 << last.shift) - 1))
-        else:
-            # zero-payload regime: output from bin positions alone.
-            trailing = jnp.zeros_like(u)
-        return self.backend.reconstruct(counts, trailing, plan)
+        with self._pass_span(pass_stats, len(plan.passes) - 1, last):
+            if not self.backend.reconstructs:
+                out = self.backend.lsd_pass(u, last)
+            else:
+                rank, counts, _ = self.backend.rank(
+                    _digit_of(u, last), last.n_bins,
+                    batch_hint=last.rank_batch(self.backend.rank_base),
+                    engine=last.engine)
+                if last.shift:
+                    # compressed entries: only the trailing bits travel;
+                    # the prefix is rebuilt from bin positions.
+                    (trailing,) = self.backend.scatter(
+                        rank, u & jnp.uint32((1 << last.shift) - 1))
+                else:
+                    # zero-payload regime: output from bin positions alone.
+                    trailing = jnp.zeros_like(u)
+                out = self.backend.reconstruct(counts, trailing, plan)
+            if pass_stats is not None:
+                self._sync(out)
+        return out
 
     # -- key–value (pairs) sort ---------------------------------------------
 
@@ -373,25 +432,34 @@ class PlanExecutor:
         if u.shape[0] == 0 or not plan.passes:
             # empty input, or the p=0 identity plan
             return (u if encode is not None else keys), values
-        for dp in plan.passes[:-1]:
-            u, *payloads = self.backend.lsd_pass_pairs(u, tuple(payloads),
-                                                       dp)
+        pass_stats = self._pass_stats(u, plan, with_index=True)
+        for i, dp in enumerate(plan.passes[:-1]):
+            with self._pass_span(pass_stats, i, dp):
+                u, *payloads = self.backend.lsd_pass_pairs(
+                    u, tuple(payloads), dp)
+                if pass_stats is not None:
+                    self._sync(u, *payloads)
         last = plan.passes[-1]
-        if not self.backend.reconstructs:
-            u, *payloads = self.backend.lsd_pass_pairs(u, tuple(payloads),
-                                                       last)
-            return u, (payloads[0] if single else tuple(payloads))
-        rank, counts, _ = self.backend.rank(
-            _digit_of(u, last), last.n_bins,
-            batch_hint=last.rank_batch(self.backend.rank_base),
-            engine=last.engine)
-        if last.shift:
-            trailing, *payloads = self.backend.scatter(
-                rank, u & jnp.uint32((1 << last.shift) - 1), *payloads)
-        else:
-            payloads = self.backend.scatter(rank, *payloads)
-            trailing = jnp.zeros_like(u)
-        keys_out = self.backend.reconstruct(counts, trailing, plan)
+        with self._pass_span(pass_stats, len(plan.passes) - 1, last):
+            if not self.backend.reconstructs:
+                u, *payloads = self.backend.lsd_pass_pairs(
+                    u, tuple(payloads), last)
+                if pass_stats is not None:
+                    self._sync(u, *payloads)
+                return u, (payloads[0] if single else tuple(payloads))
+            rank, counts, _ = self.backend.rank(
+                _digit_of(u, last), last.n_bins,
+                batch_hint=last.rank_batch(self.backend.rank_base),
+                engine=last.engine)
+            if last.shift:
+                trailing, *payloads = self.backend.scatter(
+                    rank, u & jnp.uint32((1 << last.shift) - 1), *payloads)
+            else:
+                payloads = self.backend.scatter(rank, *payloads)
+                trailing = jnp.zeros_like(u)
+            keys_out = self.backend.reconstruct(counts, trailing, plan)
+            if pass_stats is not None:
+                self._sync(keys_out, *payloads)
         return keys_out, (payloads[0] if single else tuple(payloads))
 
     # -- argsort ------------------------------------------------------------
@@ -407,8 +475,12 @@ class PlanExecutor:
         idx = jnp.arange(n, dtype=jnp.int32)
         if n == 0 or not plan.passes:
             return idx  # p=0: all keys equal, stable perm is the identity
-        for dp in plan.passes:
-            u, idx = self.backend.lsd_pass_pairs(u, (idx,), dp)
+        pass_stats = self._pass_stats(u, plan, with_index=True)
+        for i, dp in enumerate(plan.passes):
+            with self._pass_span(pass_stats, i, dp):
+                u, idx = self.backend.lsd_pass_pairs(u, (idx,), dp)
+                if pass_stats is not None:
+                    self._sync(u, idx)
         return idx
 
     # -- segmented argsort (batched equal-length sorts) ----------------------

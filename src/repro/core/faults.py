@@ -38,6 +38,8 @@ import time
 import zlib
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.obs import metrics, trace
+
 __all__ = [
     "CorruptFragmentError",
     "FaultPlan",
@@ -275,6 +277,12 @@ def poll(site: str) -> Optional[str]:
     if inj is None:
         return None
     kind = inj.poll(site)
+    if kind is not None:
+        # a fired fault marks whatever span is active when it hits, so
+        # traces show *where in the pipeline* each injection landed
+        active = trace.current()
+        if active is not None:
+            active.annotate("faults", f"{site}:{kind}")
     if kind == "transient":
         raise TransientStoreError(site, "injected transient fault")
     if kind == "permanent":
@@ -310,22 +318,33 @@ def with_retries(site: str, attempt: Callable[[], object],
     :class:`CorruptFragmentError` and :class:`StorePermanentError` pass
     straight through (retrying cannot help either).  ``on_retry`` is the
     caller's event counter hook, invoked once per retried failure.
+
+    Every retried failure also emits a structured ``store.retry`` event
+    (site, attempt index, backoff, exception class) through the
+    :mod:`repro.obs.metrics` registry, so chaos tests assert retry
+    *counts* — not just final outcomes.
     """
     retries = store_retries()
     delay = _BACKOFF_BASE_S
     for i in range(retries + 1):
+        err: BaseException
         try:
             return attempt()
         except (CorruptFragmentError, StorePermanentError):
             raise
-        except TransientStoreError:
+        except TransientStoreError as e:
             if i == retries:
                 raise
+            err = e
         except OSError as e:
             if classify_oserror(e) == "permanent":
                 raise StorePermanentError(site, str(e)) from e
             if i == retries:
                 raise TransientStoreError(site, str(e)) from e
+            err = e
+        backoff_s = delay if active_plan() is None else 0.0
+        metrics.event("store.retry", site=site, attempt=i,
+                      backoff_s=backoff_s, error=type(err).__name__)
         if on_retry is not None:
             on_retry()
         if active_plan() is None:  # injected chaos must not wait on clock

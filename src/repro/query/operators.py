@@ -38,7 +38,9 @@ back through these same in-memory primitives.
 
 from __future__ import annotations
 
+import contextlib
 import functools
+import time
 from typing import Mapping, Optional, Tuple
 
 import jax
@@ -46,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import JnpBackend, PlanExecutor, SortPlan, dispatch
+from repro.obs import metrics, trace
 from repro.query.codec import (
     Codec,
     ColumnSpec,
@@ -387,6 +390,20 @@ def sort_rowids_batched(words: jnp.ndarray, bits: int, seg_len_log2: int,
     return _segmented_chain(active, plans, int(seg_len_log2))(words)
 
 
+@contextlib.contextmanager
+def _op_scope(name: str, rows: int):
+    """Per-operator request scope: a ``query.<name>`` span (when tracing)
+    plus the p50/p99-capable latency histogram and request counter the
+    serving layer reads — every in-memory operator call is one
+    "request" in the registry."""
+    t0 = time.perf_counter()
+    with trace.span(f"query.{name}", rows=rows):
+        yield
+    metrics.histogram(f"query.{name}.latency_s").observe(
+        time.perf_counter() - t0)
+    metrics.counter(f"query.{name}.requests").inc()
+
+
 def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
              plans: Optional[Tuple[SortPlan, ...]] = None,
              placement=None) -> Table:
@@ -411,9 +428,10 @@ def order_by(table: Table, by, codecs: Optional[Mapping[str, Codec]] = None,
     assert placement is None, (
         "placement is the out-of-core fragment store; an in-memory Table "
         "sorts in place — wrap it in a StreamTable to place on a mesh")
-    codec, prepped = _key_data(table, by, codecs)
-    _, rowids = sort_rowids_fused(codec, prepped, plans)
-    return table.take(rowids)
+    with _op_scope("order_by", len(table)):
+        codec, prepped = _key_data(table, by, codecs)
+        _, rowids = sort_rowids_fused(codec, prepped, plans)
+        return table.take(rowids)
 
 
 # MSD digit width of the top-k pruning histogram: wide enough that a
@@ -469,6 +487,11 @@ def top_k(table: Table, by, k: int,
         "sorts in place — wrap it in a StreamTable to place on a mesh")
     if k <= 0:
         return table.head(0)
+    with _op_scope("top_k", len(table)):
+        return _top_k_mem(table, by, k, codecs, plans)
+
+
+def _top_k_mem(table: Table, by, k: int, codecs, plans) -> Table:
     codec, prepped = _key_data(table, by, codecs)
     n = jax.tree_util.tree_leaves(prepped)[0].shape[0]
     if k < n:
@@ -539,10 +562,11 @@ def distinct(table: Table, by=None,
         "distinct is in-memory only; stream through order_by/group_by "
         "(repro.stream) or materialize with StreamTable.to_table()")
     by = _normalize_by(by if by is not None else table.column_names)
-    codec, prepped = _key_data(table, by, codecs)
-    sorted_words, rowids = sort_rowids_fused(codec, prepped, plans)
-    starts = _segments(sorted_words)
-    return table.take(jnp.asarray(np.asarray(rowids)[starts]))
+    with _op_scope("distinct", len(table)):
+        codec, prepped = _key_data(table, by, codecs)
+        sorted_words, rowids = sort_rowids_fused(codec, prepped, plans)
+        starts = _segments(sorted_words)
+        return table.take(jnp.asarray(np.asarray(rowids)[starts]))
 
 
 # aggregation spec: out_name -> (column | None, "sum"|"count"|"min"|"max")
@@ -575,6 +599,11 @@ def group_by(table: Table, by, aggs: Mapping[str, Tuple[Optional[str], str]],
         "placement is the out-of-core fragment store; an in-memory Table "
         "sorts in place — wrap it in a StreamTable to place on a mesh")
     by = _normalize_by(by)
+    with _op_scope("group_by", len(table)):
+        return _group_by_mem(table, by, aggs, codecs, plans)
+
+
+def _group_by_mem(table: Table, by, aggs, codecs, plans) -> Table:
     codec, prepped = _key_data(table, by, codecs)
     sorted_words, rowids = sort_rowids_fused(codec, prepped, plans)
     starts = _segments(sorted_words)
@@ -629,6 +658,12 @@ def sort_merge_join(left: Table, right: Table, on,
     by = _normalize_by(on)
     for name, asc in by:
         assert asc, "join keys have no direction; use plain column names"
+    with _op_scope("sort_merge_join", len(left) + len(right)):
+        return _join_mem(left, right, on, by, codecs, suffixes, plans)
+
+
+def _join_mem(left: Table, right: Table, on, by, codecs, suffixes,
+              plans) -> Table:
     codec_l, pre_l = _key_data(left, on, codecs)
     codec_r, pre_r = _key_data(right, on, codecs)
     assert [(type(s.codec), s.codec.bits) for s in codec_l.specs] == \

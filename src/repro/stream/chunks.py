@@ -49,6 +49,7 @@ import os
 import shutil
 import tempfile
 import threading
+import time
 import weakref
 import zlib
 from typing import Callable, Iterator, List, Optional, Sequence
@@ -60,6 +61,7 @@ from repro.core.faults import (
     CorruptFragmentError,
     StorePermanentError,
 )
+from repro.obs import metrics, trace
 
 __all__ = [
     "ArraySource",
@@ -144,6 +146,7 @@ class MemoryBudget:
         with self._lock:
             self._held += b
             self.peak_bytes = max(self.peak_bytes, self._held)
+        metrics.gauge("budget.peak_bytes").set_max(self.peak_bytes)
         try:
             yield b
         finally:
@@ -161,6 +164,7 @@ class MemoryBudget:
         resident = sum(int(a.nbytes) for a in arrays if a is not None)
         with self._lock:
             self.peak_bytes = max(self.peak_bytes, resident + self._held)
+        metrics.gauge("budget.peak_bytes").set_max(self.peak_bytes)
         return resident
 
 
@@ -540,6 +544,12 @@ class RunStore(PlacementStore):
         self._base_refs: dict = {}
         self.put_log: list = []
         self.get_log: list = []
+        #: bytes physically written/read per successful put/get (slice
+        #: entries write 0 new bytes: their base run's put carried them).
+        #: One entry per logged operation; a get that finally *failed*
+        #: appends 0 so counts stay aligned with :attr:`get_log`.
+        self.put_log_bytes: list = []
+        self.get_log_bytes: list = []
         #: counters of swallowed / retried / recovered I/O events — the
         #: "route, don't silently drop" ledger (e.g. ``put.retry``,
         #: ``delete.missing``, ``recover.torn_run``)
@@ -644,12 +654,18 @@ class RunStore(PlacementStore):
                 _corrupt_file(self._path(rid, len(arrays) - 1))
             return tuple(crcs)
 
-        crcs = faults.with_retries(
-            _SITE_PUT, attempt,
-            on_retry=lambda: self._count("put.retry"))
+        nbytes = sum(int(a.nbytes) for a in arrays)
+        with trace.span("store.put", store=self.site_prefix, rid=rid,
+                        bytes=nbytes, arrays=len(arrays)):
+            crcs = faults.with_retries(
+                _SITE_PUT, attempt,
+                on_retry=lambda: self._count("put.retry"))
         self._widths[rid] = len(arrays)
         self._crcs[rid] = crcs
         self.put_log.append(rid)
+        self.put_log_bytes.append(nbytes)
+        metrics.counter(f"store.{self.site_prefix}.put.calls").inc()
+        metrics.counter(f"store.{self.site_prefix}.put.bytes").inc(nbytes)
         return rid
 
     def get(self, rid: int, mmap: bool = False):
@@ -662,6 +678,7 @@ class RunStore(PlacementStore):
         consumed.  A slice fragment verifies its base run, then reads
         its row range off the memory-map — only that range's pages are
         ever resident."""
+        crc_s = [0.0]  # CRC-verify wall, summed across retry attempts
         if rid in self._slices:
             base, lo, hi = self._slices[rid]
             self.get_log.append(rid)
@@ -670,15 +687,15 @@ class RunStore(PlacementStore):
                 kind = faults.poll(_SITE_GET)
                 if kind == "corrupt":
                     _corrupt_file(self._path(base, 0))
+                t0 = time.perf_counter()
                 self._verify(base)
+                crc_s[0] += time.perf_counter() - t0
                 return tuple(
                     np.load(self._path(base, j), mmap_mode="r",
                             allow_pickle=False)[lo:hi]
                     for j in range(self._widths[base]))
 
-            return faults.with_retries(
-                _SITE_GET, attempt_slice,
-                on_retry=lambda: self._count("get.retry"))
+            return self._traced_get(rid, attempt_slice, crc_s)
         assert rid in self._widths, f"no run {rid} in store"
         self.get_log.append(rid)
 
@@ -686,15 +703,35 @@ class RunStore(PlacementStore):
             kind = faults.poll(_SITE_GET)
             if kind == "corrupt":
                 _corrupt_file(self._path(rid, self._widths[rid] - 1))
+            t0 = time.perf_counter()
             self._verify(rid)
+            crc_s[0] += time.perf_counter() - t0
             mode = "r" if mmap else None
             return tuple(
                 np.load(self._path(rid, j), mmap_mode=mode,
                         allow_pickle=False)
                 for j in range(self._widths[rid]))
 
-        return faults.with_retries(
-            _SITE_GET, attempt, on_retry=lambda: self._count("get.retry"))
+        return self._traced_get(rid, attempt, crc_s)
+
+    def _traced_get(self, rid: int, attempt, crc_s: list):
+        """Run one get attempt under the retry contract, a ``store.get``
+        span (bytes returned + CRC-verify wall) and the byte ledger."""
+        with trace.span("store.get", store=self.site_prefix,
+                        rid=rid) as sp:
+            try:
+                out = faults.with_retries(
+                    _SITE_GET, attempt,
+                    on_retry=lambda: self._count("get.retry"))
+            except BaseException:
+                self.get_log_bytes.append(0)
+                raise
+            nbytes = sum(int(a.nbytes) for a in out)
+            sp.set(bytes=nbytes, crc_s=crc_s[0])
+        self.get_log_bytes.append(nbytes)
+        metrics.counter(f"store.{self.site_prefix}.get.calls").inc()
+        metrics.counter(f"store.{self.site_prefix}.get.bytes").inc(nbytes)
+        return out
 
     def _verify(self, rid: int) -> None:
         for j, crc in enumerate(self._crcs.get(rid, ())):
@@ -752,31 +789,41 @@ class RunStore(PlacementStore):
         before any mutation (the base-run spill itself retries inside
         :meth:`put`), so a transient distribute retry is clean."""
         site = _SITE_DISTRIBUTE
-        faults.with_retries(
-            site, lambda: faults.poll(site),
-            on_retry=lambda: self._count("distribute.retry"))
-        frag_ids: list = [[] for _ in range(num_partitions)]
-        order = np.argsort(pid, kind="stable")  # arrival kept within pid
-        pid_sorted = pid[order]
-        bounds = np.searchsorted(pid_sorted, np.arange(num_partitions + 1))
-        keep = order[bounds[0]:]  # pid == -1 rows fall before bounds[0]
-        if keep.shape[0] == 0:
+        with trace.span("store.distribute", store=self.site_prefix,
+                        partitions=num_partitions,
+                        rows=int(pid.shape[0])):
+            # byte attribution stays with the nested store.put span — a
+            # distribute claims no traffic of its own, so phase totals
+            # never double-count the base-run spill
+            faults.with_retries(
+                site, lambda: faults.poll(site),
+                on_retry=lambda: self._count("distribute.retry"))
+            frag_ids: list = [[] for _ in range(num_partitions)]
+            order = np.argsort(pid, kind="stable")  # arrival kept in pid
+            pid_sorted = pid[order]
+            bounds = np.searchsorted(pid_sorted,
+                                     np.arange(num_partitions + 1))
+            keep = order[bounds[0]:]  # pid == -1 rows fall before bounds[0]
+            if keep.shape[0] == 0:
+                return frag_ids
+            base = self.put(words[keep], *(p[keep] for p in payloads))
+            refs = 0
+            for i in range(num_partitions):
+                lo, hi = bounds[i] - bounds[0], bounds[i + 1] - bounds[0]
+                if hi > lo:
+                    with self._id_lock:
+                        sid = self._next_id
+                        self._next_id += 1
+                    self._slices[sid] = (base, int(lo), int(hi))
+                    refs += 1
+                    self.put_log.append(sid)
+                    # a slice writes no new bytes: its rows live in the
+                    # base run whose put just accounted them
+                    self.put_log_bytes.append(0)
+                    frag_ids[i].append(sid)
+            self._base_refs[base] = refs
+            self._persist_slices()
             return frag_ids
-        base = self.put(words[keep], *(p[keep] for p in payloads))
-        refs = 0
-        for i in range(num_partitions):
-            lo, hi = bounds[i] - bounds[0], bounds[i + 1] - bounds[0]
-            if hi > lo:
-                with self._id_lock:
-                    sid = self._next_id
-                    self._next_id += 1
-                self._slices[sid] = (base, int(lo), int(hi))
-                refs += 1
-                self.put_log.append(sid)
-                frag_ids[i].append(sid)
-        self._base_refs[base] = refs
-        self._persist_slices()
-        return frag_ids
 
     # -- the log channel -------------------------------------------------------
 
@@ -850,6 +897,7 @@ class RunStore(PlacementStore):
 
     def _count(self, event: str) -> None:
         self.events[event] += 1
+        metrics.counter(f"store.{self.site_prefix}.events.{event}").inc()
 
     def _write_json_atomic(self, path: str, payload: dict) -> None:
         tmp = path + ".tmp"

@@ -37,6 +37,7 @@ power-of-two padded chunks shard evenly.
 
 from __future__ import annotations
 
+import time
 import zlib
 from typing import Optional
 
@@ -44,6 +45,7 @@ import numpy as np
 
 from repro.core import faults
 from repro.core.faults import CorruptFragmentError, StorePermanentError
+from repro.obs import metrics, trace
 from repro.stream.chunks import MemoryBudget, PlacementStore
 
 __all__ = ["DeviceShardStore"]
@@ -126,6 +128,10 @@ class DeviceShardStore(PlacementStore):
         self._frag_dev: dict = {}    # rid -> landing device (None: direct put)
         self.put_log: list = []
         self.get_log: list = []
+        #: bytes per successful put/get, aligned with the logs (same
+        #: contract as :class:`~repro.stream.chunks.RunStore`)
+        self.put_log_bytes: list = []
+        self.get_log_bytes: list = []
         #: (fragment id, device index) per placed fragment — the counting
         #: record for "pruned devices receive zero fragments"
         self.device_log: list = []
@@ -171,16 +177,23 @@ class DeviceShardStore(PlacementStore):
                 held = held[:-1] + (_flip_byte(held[-1]),)
             return held, crcs
 
-        held, crcs = faults.with_retries(_SITE_PUT, attempt)
+        nbytes = sum(int(np.asarray(a).nbytes) for a in arrays)
+        with trace.span("store.put", store=self.site_prefix, rid=rid,
+                        bytes=nbytes, arrays=len(arrays)):
+            held, crcs = faults.with_retries(_SITE_PUT, attempt)
         self._frags[rid] = held
         self._crcs[rid] = crcs
         self._frag_dev[rid] = None
         self.put_log.append(rid)
+        self.put_log_bytes.append(nbytes)
+        metrics.counter(f"store.{self.site_prefix}.put.calls").inc()
+        metrics.counter(f"store.{self.site_prefix}.put.bytes").inc(nbytes)
         return rid
 
     def get(self, rid: int, mmap: bool = False):
         assert rid in self._frags, f"no fragment {rid} in store"
         self.get_log.append(rid)
+        crc_s = [0.0]  # CRC-verify wall, summed across retry attempts
 
         def attempt():
             kind = faults.poll(_SITE_GET)
@@ -188,6 +201,7 @@ class DeviceShardStore(PlacementStore):
                 arrays = self._frags[rid]
                 self._frags[rid] = arrays[:-1] + (_flip_byte(arrays[-1]),)
             arrays = self._frags[rid]
+            t0 = time.perf_counter()
             for j, crc in enumerate(self._crcs.get(rid, ())):
                 got = _array_crc(arrays[j])
                 if got != crc:
@@ -195,9 +209,22 @@ class DeviceShardStore(PlacementStore):
                         _SITE_GET,
                         f"fragment {rid} array {j}: CRC32 {got:#010x} != "
                         f"recorded {crc:#010x}")
+            crc_s[0] += time.perf_counter() - t0
             return arrays
 
-        return faults.with_retries(_SITE_GET, attempt)
+        with trace.span("store.get", store=self.site_prefix,
+                        rid=rid) as sp:
+            try:
+                out = faults.with_retries(_SITE_GET, attempt)
+            except BaseException:
+                self.get_log_bytes.append(0)
+                raise
+            nbytes = sum(int(a.nbytes) for a in out)
+            sp.set(bytes=nbytes, crc_s=crc_s[0])
+        self.get_log_bytes.append(nbytes)
+        metrics.counter(f"store.{self.site_prefix}.get.calls").inc()
+        metrics.counter(f"store.{self.site_prefix}.get.bytes").inc(nbytes)
+        return out
 
     def delete(self, rid: int) -> None:
         faults.with_retries(
@@ -243,15 +270,27 @@ class DeviceShardStore(PlacementStore):
         one bucket ``all_to_all`` per word column.  Pruned rows
         (``pid < 0``) drop on the wire; per chunk each partition lands at
         most one fragment (its owner is unique), rows in arrival order."""
+        n = int(words.shape[0])
+        D = self._D
+        frag_ids: list = [[] for _ in range(num_partitions)]
+        if n == 0:
+            return frag_ids
+        # byte attribution stays with the nested store.put spans (see
+        # RunStore.distribute): this span carries placement shape only
+        dist_span = trace.span("store.distribute", store=self.site_prefix,
+                               partitions=num_partitions, rows=n,
+                               devices=D)
+        with dist_span:
+            return self._distribute(words, payloads, pid, num_partitions,
+                                    frag_ids)
+
+    def _distribute(self, words, payloads, pid, num_partitions, frag_ids):
         import jax.numpy as jnp
 
         from repro.core.fractal_tree import ceil_log2
 
         n = int(words.shape[0])
         D = self._D
-        frag_ids: list = [[] for _ in range(num_partitions)]
-        if n == 0:
-            return frag_ids
         # the injection point sits before the collective fires, so a
         # transient retry re-enters a clean distribute (the per-fragment
         # puts retry inside put itself)

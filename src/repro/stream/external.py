@@ -80,6 +80,7 @@ from repro.core.executor import PlanExecutor
 from repro.core.faults import StoreError, StorePermanentError
 from repro.core.fractal_tree import ceil_log2
 from repro.core.sort_plan import DigitPass, quantize_sort_bits
+from repro.obs import metrics, trace
 from repro.query.codec import word_widths
 from repro.stream.chunks import (
     ChunkSource,
@@ -114,6 +115,21 @@ def row_cost_bytes(num_words: int, payload_bytes: int = 0) -> int:
     the same moments to the tracker, keeping the asserted ``peak_bytes``
     honest against this sizing."""
     return 12 * num_words + 6 + payload_bytes
+
+
+def _emitted(words: np.ndarray, payloads: tuple) -> None:
+    """Account one emitted chunk: registry counters always, plus a
+    zero-width ``stream.emit`` marker span (the byte ledger of the emit
+    phase) when tracing.  Crucially *closed before the caller yields* —
+    a span held open across a generator ``yield`` would dangle on the
+    consumer thread's stack."""
+    rows = int(words.shape[0])
+    nbytes = int(words.nbytes) + sum(int(p.nbytes) for p in payloads)
+    metrics.counter("stream.emit.rows").inc(rows)
+    metrics.counter("stream.emit.bytes").inc(nbytes)
+    if trace.enabled():
+        with trace.span("stream.emit", rows=rows, bytes=nbytes):
+            pass
 
 
 def _stream_workers() -> int:
@@ -236,6 +252,7 @@ def stream_sorted_words(
             budget.charge(words, *payloads)
             words, payloads = clip(words, payloads)
             if words.shape[0]:
+                _emitted(words, payloads)
                 yield words, payloads
                 emitted += int(words.shape[0])
             if room() == 0:
@@ -245,6 +262,7 @@ def stream_sorted_words(
     w = min(partition_bits, hi)
     dp = DigitPass(shift=0, bits=w)
     n_payloads = None
+    hist_bytes = [0]  # code-word bytes the histogram pass streamed
 
     def field_chunks():
         nonlocal n_payloads
@@ -252,6 +270,7 @@ def stream_sorted_words(
             if n_payloads is None:
                 n_payloads = len(payloads)
             budget.charge(words, *payloads)
+            hist_bytes[0] += int(words.nbytes)
             yield _extract_field(words, bits, hi - w, w)
 
     if manifest is not None:
@@ -268,8 +287,10 @@ def stream_sorted_words(
             "resume requires the same memory budget (the partition plan "
             "derives from it)")
     else:
-        counts, n_total = streamed_field_counts(field_chunks(), dp,
-                                                executor)
+        with trace.span("stream.histogram", level_bits=hi, width=w) as hsp:
+            counts, n_total = streamed_field_counts(field_chunks(), dp,
+                                                    executor)
+            hsp.set(rows=int(n_total), bytes_in=hist_bytes[0])
         if n_total == 0:
             return
         budget_rows = budget.rows(row_bytes)
@@ -295,6 +316,7 @@ def stream_sorted_words(
         words, payloads = store.sort_rows(words, payloads, bits, hi, budget)
         words, payloads = clip(words, payloads)
         if words.shape[0]:
+            _emitted(words, payloads)
             yield words, payloads
         if journal is not None:
             manifest["complete"] = True
@@ -323,14 +345,24 @@ def stream_sorted_words(
         assert len(frag_ids) == len(partitions), "resume manifest mismatch"
     else:
         frag_ids = [[] for _ in partitions]
-        for words, payloads in chunks_fn():
-            budget.charge(words, *payloads)
-            digit = _extract_field(words, bits, hi - w, w).astype(np.int64)
-            pid = lut[digit]
-            for i, ids in enumerate(
-                    store.distribute(words, payloads, pid,
-                                     len(partitions))):
-                frag_ids[i].extend(ids)
+        with trace.span("stream.distribute",
+                        partitions=len(partitions)) as dsp:
+            dist_rows, dist_bytes = 0, 0
+            for words, payloads in chunks_fn():
+                budget.charge(words, *payloads)
+                dist_rows += int(words.shape[0])
+                dist_bytes += int(words.nbytes) + sum(
+                    int(p.nbytes) for p in payloads)
+                digit = _extract_field(words, bits, hi - w,
+                                       w).astype(np.int64)
+                pid = lut[digit]
+                for i, ids in enumerate(
+                        store.distribute(words, payloads, pid,
+                                         len(partitions))):
+                    frag_ids[i].extend(ids)
+            # rows/bytes are what the pass *streamed*; the spilled bytes
+            # live on the nested store.put spans (no double counting)
+            dsp.set(rows=dist_rows, bytes_in=dist_bytes)
         if journal is not None:
             manifest["frag_ids"] = [
                 [int(r) for r in ids] for ids in frag_ids]
@@ -369,13 +401,20 @@ def stream_sorted_words(
     fallback: Optional[PlacementStore] = None
 
     def sorted_partition(part, frags):
-        words, payloads = _load_fragments(st, frags, n_payloads, budget)
-        # the partition's bin range pins the top shared_field_bits of its
-        # field: only the code bits below stay undetermined, so the sort
-        # narrows to them (a single-bin partition drops the whole field)
-        L, sort_bits = part_bucket(part)
-        return st.sort_rows(words, payloads, bits, sort_bits, budget,
-                            plans=plans_for(L, sort_bits))
+        # runs on pool worker threads too: the span parents under the
+        # submitter's context via trace.wrap_ctx at submit time
+        with trace.span("stream.partition_sort", rows=part.count) as sp:
+            words, payloads = _load_fragments(st, frags, n_payloads,
+                                              budget)
+            sp.set(bytes_in=int(words.nbytes) + sum(
+                int(p.nbytes) for p in payloads))
+            # the partition's bin range pins the top shared_field_bits of
+            # its field: only the code bits below stay undetermined, so
+            # the sort narrows to them (a single-bin partition drops the
+            # whole field)
+            L, sort_bits = part_bucket(part)
+            return st.sort_rows(words, payloads, bits, sort_bits, budget,
+                                plans=plans_for(L, sort_bits))
 
     def fail_over(from_idx):
         """Migrate every not-yet-emitted fragment to a fresh disk store
@@ -472,6 +511,7 @@ def stream_sorted_words(
                     words, payloads = arrays[0], tuple(arrays[1:])
                     budget.charge(words, *payloads)
                     if words.shape[0]:
+                        _emitted(words, payloads)
                         yield words, payloads
                         emitted += int(words.shape[0])
                 for rid in frags:
@@ -483,12 +523,20 @@ def stream_sorted_words(
             if idx in group_of:
                 entries = [items[i] for i in group_of[idx]]
                 L, sort_bits = part_bucket(part)
-                loaded = [
-                    _load_fragments(st, fr, n_payloads, budget)
-                    for _, fr in entries]
-                results = st.sort_rows_batched(
-                    loaded, bits, sort_bits, budget,
-                    plans=plans_for(L, sort_bits))
+                with trace.span("stream.partition_sort",
+                                segments=len(entries)) as bsp:
+                    loaded = [
+                        _load_fragments(st, fr, n_payloads, budget)
+                        for _, fr in entries]
+                    bsp.set(rows=sum(int(w_.shape[0])
+                                     for w_, _ in loaded),
+                            bytes_in=sum(
+                                int(w_.nbytes) + sum(int(p.nbytes)
+                                                     for p in ps)
+                                for w_, ps in loaded))
+                    results = st.sort_rows_batched(
+                        loaded, bits, sort_bits, budget,
+                        plans=plans_for(L, sort_bits))
                 # head emits now; later members spill back pre-sorted and
                 # re-load in partition order at their own turn
                 for i, (_, fr), (words, payloads) in zip(
@@ -499,6 +547,7 @@ def stream_sorted_words(
                         st.delete(rid)
                 words, payloads = results[0]
                 if words.shape[0]:
+                    _emitted(words, payloads)
                     yield words, payloads
                     emitted += int(words.shape[0])
                 continue
@@ -508,6 +557,7 @@ def stream_sorted_words(
                 words, payloads = arrays[0], tuple(arrays[1:])
                 budget.charge(words, *payloads)
                 if words.shape[0]:
+                    _emitted(words, payloads)
                     yield words, payloads
                     emitted += int(words.shape[0])
                 st.delete(rid)
@@ -523,7 +573,10 @@ def stream_sorted_words(
                         pj, fj = items[j]
                         if (j not in pending and str(j) not in done
                                 and not pj.oversized(budget_rows)):
-                            pending[j] = pool.submit(sorted_partition, pj, fj)
+                            # wrap_ctx re-parents the worker thread's
+                            # spans under this thread's active span
+                            pending[j] = pool.submit(
+                                trace.wrap_ctx(sorted_partition), pj, fj)
                         j += 1
                     try:
                         words, payloads = pending.pop(idx).result()
@@ -550,6 +603,7 @@ def stream_sorted_words(
                     journal_done(idx, [store.put(words, *payloads)]
                                  if words.shape[0] else [])
                 if words.shape[0]:
+                    _emitted(words, payloads)
                     yield words, payloads
                     emitted += int(words.shape[0])
             else:

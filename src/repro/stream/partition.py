@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.core.executor import JnpBackend, PlanExecutor
+from repro.obs import metrics
 from repro.core.fractal_tree import ceil_log2
 from repro.core.sort_plan import DigitPass
 
@@ -149,9 +150,11 @@ def streamed_field_counts(
                                           pad_to=pad_to)))
         return programs[key]
 
+    n_chunks = 0
     for chunk in chunk_iter:
         chunk = np.ascontiguousarray(chunk)
         m = int(chunk.shape[0])
+        n_chunks += 1
         if carried is not None and window_rows + m > _CARRY_SPILL_ROWS:
             total64 += np.asarray(carried).astype(np.int64)
             carried, window_rows = None, 0
@@ -162,6 +165,8 @@ def streamed_field_counts(
         total += m
     if carried is not None:
         total64 += np.asarray(carried).astype(np.int64)
+    metrics.counter("stream.histogram.chunks").inc(n_chunks)
+    metrics.counter("stream.histogram.rows").inc(total)
     return total64, total
 
 
